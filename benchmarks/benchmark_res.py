@@ -1,0 +1,76 @@
+"""Benchmark REs and text corpora (paper Tab. 7 stand-ins, self-generated).
+
+The paper's corpora (BIBLE html, FASTA, TRAFFIC syslog, REgen) are external;
+we synthesize structurally equivalent ones so every benchmark is hermetic:
+
+  BIGDATA  small random RE (size ~9) + random valid text   [Tab. 7 row 1]
+  BIBLE    mid RE (~31 syms): h3-title search in html-ish text
+  FASTA    large RE (~102 syms): DNA records in FASTA format
+  TRAFFIC  large RE (~123 syms): GET/POST request log lines
+  REGEN    random REs of growing size + valid texts          [Tab. 7 row 5]
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import numpy as np
+
+from repro.data.regen import random_regex, sample_string
+from repro.core import regex as rx
+
+BIGDATA_RE = "(ab|ba|b)+"
+BIBLE_RE = r"(<h3>(a|b|c|d| )+</h3>|(a|b|c|d|<|>|/| )+)+"
+FASTA_RE = r"(>(\w| )+\n([ACGT]+\n)+)+"
+TRAFFIC_RE = (
+    r"((GET|POST|PUT) /([a-z0-9]|/)* ([0-9]{3}) (ok|err|-)\n)+"
+)
+
+BENCHMARKS: Dict[str, str] = {
+    "BIGDATA": BIGDATA_RE,
+    "BIBLE": BIBLE_RE,
+    "FASTA": FASTA_RE,
+    "TRAFFIC": TRAFFIC_RE,
+}
+
+
+def make_text(name: str, target_len: int, seed: int = 0) -> bytes:
+    rng = np.random.Generator(np.random.Philox(seed))
+    out = []
+    n = 0
+    ast = rx.parse_regex(BENCHMARKS[name])
+    # sample the top-level Plus body repeatedly for steady record streams
+    body = ast.item if isinstance(ast, rx.Plus) else ast
+    while n < target_len:
+        rec = sample_string(body, rng, max_rep=6)
+        if not rec:
+            continue
+        out.append(rec)
+        n += len(rec)
+    return b"".join(out)[: target_len or None]
+
+
+def make_text_exact(name: str, target_len: int, seed: int = 0) -> bytes:
+    """Valid text close to target_len (never truncated mid-record)."""
+    rng = np.random.Generator(np.random.Philox(seed))
+    ast = rx.parse_regex(BENCHMARKS[name])
+    body = ast.item if isinstance(ast, rx.Plus) else ast
+    out = []
+    n = 0
+    while n < target_len:
+        rec = sample_string(body, rng, max_rep=6)
+        if not rec:
+            continue
+        out.append(rec)
+        n += len(rec)
+    return b"".join(out)
+
+
+def regen_suite(n_res: int, size_lo: int, size_hi: int, seed: int = 0):
+    rng = np.random.Generator(np.random.Philox(seed))
+    suite = []
+    for i in range(n_res):
+        size = int(size_lo + (size_hi - size_lo) * i / max(n_res - 1, 1))
+        ast = random_regex(size, rng)
+        suite.append((size, ast))
+    return suite

@@ -1,0 +1,215 @@
+"""Benchmark harness — one function per paper table / figure.
+
+Prints ``name,param,value,derived`` CSV rows.  ``--quick`` (default) shrinks
+text sizes for CI; ``--full`` reproduces paper-scale measurements on a larger
+machine.  Mapping to the paper:
+
+  tab5            Tab. 5   — NFA/DFA/ME-DFA state counts for e(k)
+  fig20           Fig. 20  — segment count vs RE size over random REs
+  generation      Sect.5.2 — parser-generation time per benchmark RE
+  parse_times     Fig. 15  — absolute parsing time (serial DFA / engine c=1/8)
+  speedup         Fig.16/18— two-phase work model + measured phase ratio
+  recognizer      Fig. 16r — recognition cost (reach+join only)
+  memory          App. C   — SLPF bytes/char, packed and compressed
+  engine_roofline §Roofline— per-cell terms (from the dry-run JSON)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+
+def _time(fn, reps=3):
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def bench_tab5(rows):
+    from repro.core.automata import build_dfa, build_medfa, build_nfa
+    from repro.core.segments import compute_segments
+
+    for k in range(1, 10):
+        t = compute_segments(f"(a|b)*a(a|b){{{k}}}")
+        nfa = build_nfa(t)
+        dfa = build_dfa(nfa)
+        me = build_medfa(nfa)
+        rows.append(("tab5.segments", k, t.n, "count (2k+7; see EXPERIMENTS §Paper-validation)"))
+        rows.append(("tab5.dfa_states", k, dfa.n_states, f"paper={2**(k+1)+1}"))
+        rows.append(("tab5.medfa_states", k, me.n_states, "count"))
+        rows.append(("tab5.medfa_entries", k, len(me.initial), "=segments (linear in k)"))
+
+
+def bench_fig20(rows, quick):
+    from benchmarks.benchmark_res import regen_suite
+    from repro.core.numbering import number_regex
+    from repro.core.segments import compute_segments
+    from repro.core import regex as rx
+
+    n = 40 if quick else 200
+    suite = regen_suite(n, 5, 60, seed=7)
+    sizes, segs = [], []
+    for _, ast in suite:
+        numbered = number_regex(ast)
+        t = compute_segments(numbered)
+        sizes.append(rx.node_size(ast))
+        segs.append(t.n)
+    sizes = np.array(sizes, float)
+    segs = np.array(segs, float)
+    slope = float((sizes * segs).sum() / (sizes * sizes).sum())
+    corr = float(np.corrcoef(sizes, segs)[0, 1])
+    rows.append(("fig20.n_res", 0, len(sizes), "count"))
+    rows.append(("fig20.seg_per_size_slope", 0, round(slope, 3), "paper~3.2"))
+    rows.append(("fig20.pearson", 0, round(corr, 3), "paper~0.52"))
+    rows.append(("fig20.seg_range", 0, f"{int(segs.min())}-{int(segs.max())}", "paper 8-1435"))
+
+
+def bench_generation(rows):
+    from benchmarks.benchmark_res import BENCHMARKS
+    from repro.core.reference import ParallelArtifacts
+
+    for name, pattern in BENCHMARKS.items():
+        dt = _time(lambda: ParallelArtifacts.generate(pattern), reps=3)
+        art = ParallelArtifacts.generate(pattern)
+        rows.append((f"generation.{name}", art.table.n, round(dt * 1e3, 2), "ms (paper 5-29ms)"))
+
+
+def bench_parse_times(rows, quick):
+    from benchmarks.benchmark_res import BENCHMARKS, make_text_exact
+    from repro.core.engine import ParserEngine
+    from repro.core.reference import ParallelArtifacts
+    from repro.core.serial import parse_serial_dfa
+
+    n = 20_000 if quick else 2_000_000
+    for name in BENCHMARKS:
+        art = ParallelArtifacts.generate(BENCHMARKS[name])
+        text = make_text_exact(name, n, seed=1)
+        eng = ParserEngine(art.matrices)
+        t_dfa = _time(lambda: parse_serial_dfa(art.matrices, text, art.dfa, art.rdfa, art.nfa), reps=1)
+        t_eng1 = _time(lambda: eng.parse(text, n_chunks=1), reps=2)
+        t_eng8 = _time(lambda: eng.parse(text, n_chunks=8), reps=2)
+        rows.append((f"parse.{name}.serial_dfa", len(text), round(t_dfa * 1e3, 1), "ms"))
+        rows.append((f"parse.{name}.engine_c1", len(text), round(t_eng1 * 1e3, 1), "ms"))
+        rows.append((f"parse.{name}.engine_c8", len(text), round(t_eng8 * 1e3, 1), "ms"))
+
+
+def bench_speedup(rows, quick):
+    """Paper Fig. 16/18.  Wall-clock multi-core speed-up is unobservable on
+    this 1-core container; we measure the reach/build phase-work ratio of the
+    paper-faithful reference and evaluate the paper's own two-stage model:
+    speedup(c) ≈ c / (1 + w_reach/w_build) with both phases serialized —
+    ≈ c/2 when the phases weigh the same (paper Sect. 5.2 'Discussion'); the
+    transpose-backward variant (DESIGN §2) halves reach work → ceiling 2c/3."""
+    from benchmarks.benchmark_res import BIGDATA_RE, make_text_exact
+    from repro.core.reference import ParallelArtifacts, build_phase, reach_phase
+
+    art = ParallelArtifacts.generate(BIGDATA_RE)
+    text = make_text_exact("BIGDATA", 4_000 if quick else 100_000, seed=2)
+    classes = art.matrices.classes_of_text(text)
+    ell = art.table.n
+
+    chunk = classes[:2000]
+    t_reach = _time(lambda: reach_phase(art.medfa, chunk, ell), reps=2)
+    t_build = _time(
+        lambda: build_phase(art.dfa, art.nfa, frozenset(range(ell)), chunk, ell),
+        reps=2,
+    )
+    w = t_reach / max(t_build, 1e-9)
+    rows.append(("speedup.reach_over_build_work", len(chunk), round(w, 2), "measured phase ratio"))
+    for c in (2, 4, 8, 16, 32, 64):
+        paper = c / (1.0 + 1.0)            # reach ≈ build&merge (paper model)
+        measured_model = c / (1.0 + w) * (1.0 + 1.0)  # normalized two-stage
+        ours = c / (1.0 + w / 2.0) * (1.0 + w) / (1.0 + w)  # bwd reach free
+        rows.append((f"speedup.model.c{c}", c,
+                     f"paper~{paper:.1f}x ours~{c/(1.0 + w/2.0)*(1+w)/2:.1f}",
+                     "two-stage model"))
+
+
+def bench_recognizer(rows, quick):
+    from benchmarks.benchmark_res import BIGDATA_RE, make_text_exact
+    from repro.core.reference import ParallelArtifacts
+    from repro.core.serial import recognize
+
+    art = ParallelArtifacts.generate(BIGDATA_RE)
+    text = make_text_exact("BIGDATA", 20_000 if quick else 500_000, seed=3)
+    t_rec = _time(lambda: recognize(art.matrices, text, art.dfa), reps=2)
+    rows.append(("recognizer.serial_dfa", len(text), round(t_rec * 1e3, 1), "ms"))
+
+
+def bench_memory(rows, quick):
+    from benchmarks.benchmark_res import BIGDATA_RE, make_text_exact
+    from repro.core.engine import ParserEngine
+    from repro.core.reference import ParallelArtifacts
+    from repro.core.slpf import compress
+
+    art = ParallelArtifacts.generate(BIGDATA_RE)
+    eng = ParserEngine(art.matrices)
+    sizes = (1_000, 10_000) if quick else (10_000, 100_000, 1_000_000)
+    for n in sizes:
+        text = make_text_exact("BIGDATA", n, seed=4)
+        s = eng.parse(text, n_chunks=8)
+        packed = s.pack()
+        comp = compress(s)
+        rows.append((f"memory.packed_bytes_per_char.n{n}", n,
+                     round(packed.nbytes / max(len(text), 1), 3), "B/char"))
+        rows.append((f"memory.compressed_bytes_per_char.n{n}", n,
+                     round(comp.nbytes() / max(len(text), 1), 4),
+                     f"{len(comp.states)} states; {len(comp.overrides)} overrides"))
+
+
+def bench_engine_roofline(rows):
+    p = Path(__file__).resolve().parents[1] / "experiments" / "dryrun_results.json"
+    if not p.exists():
+        rows.append(("engine_roofline.missing", 0, 0, "run repro.launch.dryrun first"))
+        return
+    d = json.loads(p.read_text())
+    for k, v in sorted(d.items()):
+        if not v.get("ok") or v.get("skipped"):
+            continue
+        rows.append(
+            (f"roofline.{k}", v["chips"],
+             round(v.get("roofline_fraction", 0.0), 4),
+             f"bottleneck={v.get('bottleneck')}")
+        )
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", default=True)
+    ap.add_argument("--full", dest="quick", action="store_false")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+
+    rows = []
+    benches = {
+        "tab5": lambda: bench_tab5(rows),
+        "fig20": lambda: bench_fig20(rows, args.quick),
+        "generation": lambda: bench_generation(rows),
+        "parse_times": lambda: bench_parse_times(rows, args.quick),
+        "speedup": lambda: bench_speedup(rows, args.quick),
+        "recognizer": lambda: bench_recognizer(rows, args.quick),
+        "memory": lambda: bench_memory(rows, args.quick),
+        "engine_roofline": lambda: bench_engine_roofline(rows),
+    }
+    for name, fn in benches.items():
+        if args.only and name != args.only:
+            continue
+        t0 = time.time()
+        fn()
+        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+    print("name,param,value,derived")
+    for name, param, value, derived in rows:
+        print(f"{name},{param},{value},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Structured-output serving: RE-constrained decoding with batched requests.
+
+    PYTHONPATH=src python examples/constrained_serve.py
+    PYTHONPATH=src python examples/constrained_serve.py --pattern '(GET|POST) /[a-z]+'
+
+The paper's parser automaton as a serving feature: the DFA built for parsing
+is lifted to the token vocabulary and masks the logits each step, so every
+generated sequence is guaranteed to lie in L(e) — even from an untrained
+model (which is the demo here: random weights, valid outputs).
+"""
+
+import argparse
+import re
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parents[1] / "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.core.reference import ParallelArtifacts
+from repro.models.model import init_params
+from repro.serve.engine import ServeEngine, TokenDFA, byte_vocab
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pattern", default="(ab|a)*c")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_smoke("tinyllama-1.1b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    print(f"model: {cfg.name} (random weights) — constraint: {args.pattern!r}")
+
+    art = ParallelArtifacts.generate(args.pattern)
+    tdfa = TokenDFA.from_matrices(art.matrices, byte_vocab(cfg.vocab_size))
+    print(f"token DFA: {tdfa.delta.shape[0]} states over vocab {tdfa.delta.shape[1]}")
+
+    engine = ServeEngine(cfg, params, max_seq=args.max_new + 8,
+                         batch=args.batch, eos_id=0)
+    prompts = np.zeros((args.batch, 1), np.int32)  # BOS-ish dummy prompt
+    res = engine.generate(prompts, max_new=args.max_new, temperature=1.0,
+                          seed=args.seed, constraint=tdfa)
+    ok = 0
+    for row in res.tokens:
+        s = ""
+        for c in row:
+            if c == 0:
+                break
+            s += chr(int(c)) if 32 <= int(c) < 127 else "?"
+        match = re.fullmatch(args.pattern, s) is not None
+        ok += match
+        print(f"  {s!r:24s} fullmatch={match}")
+    print(f"{ok}/{args.batch} outputs in L(e) — guaranteed by construction")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""End-to-end training driver: train a causal LM for a few hundred steps.
+
+    PYTHONPATH=src python examples/train_lm.py                 # tiny, CPU-sized
+    PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 300
+    PYTHONPATH=src python examples/train_lm.py --arch mamba2-2.7b --smoke
+
+Demonstrates the full substrate: seekable data pipeline → sharded train step
+(grad accumulation, bf16 grads, fp32 masters) → atomic checkpointing →
+crash-resume (kill it mid-run and re-invoke: the trajectory continues
+bit-exactly).  ``--preset 100m`` is the deliverable-scale configuration for a
+real accelerator host; the default runs in seconds on CPU.
+"""
+
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parents[1] / "src"))
+
+from repro.configs import ARCH_IDS, get_smoke
+from repro.launch.mesh import make_host_mesh
+from repro.models.config import ModelConfig, ShapeSpec
+from repro.optim.adamw import AdamWConfig
+from repro.train.loop import Trainer, TrainerConfig
+
+
+def preset_100m() -> ModelConfig:
+    """~100M-parameter llama-family config (deliverable (b) scale)."""
+    return ModelConfig(
+        name="llama-100m",
+        n_layers=12,
+        d_model=768,
+        n_heads=12,
+        n_kv_heads=4,
+        d_ff=2048,
+        vocab_size=32000,
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b", help=f"{ARCH_IDS}")
+    ap.add_argument("--preset", choices=["smoke", "100m"], default="smoke")
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--workdir", default="/tmp/repro_train")
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+
+    cfg = preset_100m() if args.preset == "100m" else get_smoke(args.arch)
+    mesh = make_host_mesh()
+    shape = ShapeSpec("train", seq_len=args.seq, global_batch=args.batch, kind="train")
+    trainer = Trainer(
+        cfg, shape, mesh, args.workdir,
+        TrainerConfig(total_steps=args.steps, checkpoint_every=max(args.steps // 5, 1),
+                      log_every=max(args.steps // 10, 1)),
+        opt=AdamWConfig(lr_peak=3e-3, warmup_steps=max(args.steps // 10, 1),
+                        total_steps=args.steps),
+    )
+    print(f"training {cfg.name} ({cfg.n_params/1e6:.1f}M params) on mesh "
+          f"{dict(mesh.shape)} for {args.steps} steps "
+          f"(resumes from {args.workdir} if checkpoints exist)")
+    result = trainer.run()
+    for h in result["history"][:: max(len(result["history"]) // 10, 1)]:
+        print(f"  step {h['step']:5d} loss {h['loss']:.4f} "
+              f"gnorm {h['grad_norm']:.3f} lr {h['lr']:.2e} {h['dt']*1e3:.0f}ms")
+    print(f"final loss: {result['final_loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

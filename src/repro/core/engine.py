@@ -1,0 +1,331 @@
+"""JAX parallel parsing engine — the paper's algorithm, TPU-native (DESIGN §2).
+
+Mapping from the paper's phases to this engine (all validated against
+``core/reference.py``, the paper-faithful oracle):
+
+  reach   Per chunk, the Boolean-semiring matrix chain product
+          ``P_i = N_{y_k} ⊗ … ⊗ N_{y_1}`` (ℓ×ℓ).  Column j of ``P_i`` equals
+          ``R_{i,j}`` (Eq. 6): all ℓ speculative ME-DFA entries are evaluated
+          *simultaneously* as matrix columns on the MXU.  The ME-DFA's bounded
+          speculation (ℓ entries, never the 2^ℓ DFA states) holds identically.
+
+  join    Eq. (7) becomes an exclusive monoid scan over the chunk products.
+          Cross-device: one all_gather of the (c, ℓ, ℓ) summaries + a replicated
+          log-depth local scan (``core/scan.py``) — O(c·ℓ²) bytes of collective
+          traffic, independent of the text length.
+
+  build & Fig. 14's fused builder&merger: forward Boolean mat-vec scan emits the
+  merge   columns; the backward scan uses the *transposed* matrices and ANDs in
+          place.  Beyond the paper: the backward *reach* phase is free — reverse
+          chunk summaries are the transposes ``P_iᵀ`` (Eq. 5 + product reversal),
+          so only one reach pass is ever computed (paper runs both).
+
+  pad     Texts pad to equal static chunks with the PAD class, whose matrix is
+          the identity — a semantic no-op replacing the paper's load-balancing
+          fragments (Sect. 4.3) with SPMD-exact balance.
+
+Numeric form: {0,1} float32 matrices; ``⊗`` = matmul + min(·,1) (exact in f32 up
+to 2²⁴ ≫ ℓ).  SLPF columns are emitted bit-packed (uint32, 32 segments/word,
+App. C encoding).  The Pallas kernels in ``repro/kernels`` implement the two hot
+loops (reach product, fused build&merge) with explicit VMEM tiling; this module
+is the pure-jnp engine the kernels are verified against, and is itself the
+device program lowered in the multi-pod dry-run.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .matrices import ParserMatrices, build_matrices, unpack_bits
+from .scan import associative_prefix
+from .segments import SegmentTable
+from .slpf import SLPF
+
+
+# ----------------------------------------------------------- semiring ops
+
+
+def semiring_matmul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Boolean OR-AND product on {0,1} floats: clamp(a @ b)."""
+    return jnp.minimum(jnp.matmul(a, b, precision=jax.lax.Precision.DEFAULT), 1.0)
+
+
+def semiring_matvec(m: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    return jnp.minimum(m @ v, 1.0)
+
+
+def pack_columns_u32(cols: jnp.ndarray) -> jnp.ndarray:
+    """(…, ℓp) {0,1} floats → (…, ℓp/32) uint32, little-endian bits."""
+    shape = cols.shape
+    lp = shape[-1]
+    assert lp % 32 == 0
+    bits = cols.reshape(shape[:-1] + (lp // 32, 32)).astype(jnp.uint32)
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    return jnp.sum(bits * weights, axis=-1, dtype=jnp.uint32)
+
+
+# ---------------------------------------------------------------- engine
+
+
+@dataclass
+class EngineTables:
+    """Device-resident parser tables for one RE."""
+
+    N: jnp.ndarray            # (A+1, ℓp, ℓp) f32 — PAD class (index A) = identity
+    I: jnp.ndarray            # (ℓp,) f32
+    F: jnp.ndarray            # (ℓp,) f32
+    byte_to_class: jnp.ndarray  # (256,) int32
+    ell: int                  # true segment count
+    ell_pad: int              # padded to a multiple of ``lane_pad``
+    pad_class: int
+
+    @classmethod
+    def from_matrices(cls, m: ParserMatrices, lane_pad: int = 32) -> "EngineTables":
+        ell = m.n_segments
+        lp = max(lane_pad, ((ell + lane_pad - 1) // lane_pad) * lane_pad)
+        A1 = m.N.shape[0]
+        N = np.zeros((A1, lp, lp), dtype=np.float32)
+        N[:, :ell, :ell] = m.N.astype(np.float32)
+        N[-1] = np.eye(lp, dtype=np.float32)  # PAD = identity over the padded space
+        I = np.zeros(lp, dtype=np.float32)
+        I[:ell] = m.I
+        F = np.zeros(lp, dtype=np.float32)
+        F[:ell] = m.F
+        return cls(
+            N=jnp.asarray(N),
+            I=jnp.asarray(I),
+            F=jnp.asarray(F),
+            byte_to_class=jnp.asarray(m.byte_to_class),
+            ell=ell,
+            ell_pad=lp,
+            pad_class=m.pad_class,
+        )
+
+
+def reach_chunk(N: jnp.ndarray, chunk: jnp.ndarray) -> jnp.ndarray:
+    """Chunk product P = N[y_k] ⊗ … ⊗ N[y_1] — the reach phase (Eq. 6)."""
+    lp = N.shape[-1]
+
+    def step(P, cls):
+        return semiring_matmul(N[cls], P), None
+
+    P, _ = jax.lax.scan(step, jnp.eye(lp, dtype=N.dtype), chunk)
+    return P
+
+
+def build_merge_chunk(
+    N: jnp.ndarray, chunk: jnp.ndarray, entry_f: jnp.ndarray, entry_b: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fig. 14 fused builder&merger for one chunk.
+
+    Returns (M, beta0): M (k, ℓp) clean columns at positions 1..k of the chunk;
+    beta0 (ℓp,) the backward state at the chunk start (used for global C_0).
+    """
+
+    def fstep(v, cls):
+        nv = semiring_matvec(N[cls], v)
+        return nv, nv
+
+    _, fwd = jax.lax.scan(fstep, entry_f, chunk)            # fwd[t] = B_{t+1}
+
+    def bstep(v, cls):
+        nv = semiring_matvec(N[cls].T, v)
+        return nv, nv
+
+    _, bwd_rev = jax.lax.scan(bstep, entry_b, chunk[::-1])  # β_{k-1} … β_0
+    bwd = bwd_rev[::-1]                                     # β_0 … β_{k-1}
+    beta0 = bwd[0]
+    # merge: M[t] = fwd[t] ∧ β_{t+1};  β_k = entry_b
+    bwd_for_merge = jnp.concatenate([bwd[1:], entry_b[None]], axis=0)
+    return fwd * bwd_for_merge, beta0
+
+
+def _entries_from_products(
+    P: jnp.ndarray, I: jnp.ndarray, F: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Join phase from stacked chunk products P (c, ℓp, ℓp).
+
+    Forward entry of chunk i:  J_i  = P_{i-1} ⊗ … ⊗ P_0 applied to I.
+    Backward entry of chunk i: Ĵ   = (P_{c-1} … P_{i+1})ᵀ applied to F —
+    the transposed-suffix form that makes the backward reach free (DESIGN §2).
+    """
+    c = P.shape[0]
+    prefix = associative_prefix(semiring_matmul, P)              # P_i ⊗ … ⊗ P_0
+    Jf = jnp.concatenate(
+        [I[None], jnp.minimum(jnp.einsum("cij,j->ci", prefix[:-1], I), 1.0)], axis=0
+    )                                                            # (c, ℓp)
+    # suffix products S_i = P_{c-1} ⊗ … ⊗ P_{i+1}: reverse, prefix, reverse.
+    Prev = P[::-1]
+    suf_prefix = associative_prefix(lambda later, earlier: semiring_matmul(earlier, later), Prev)
+    # suf_prefix[j] = Prev_0 ⊗ … ⊗ Prev_j composed as P_{c-1} ⊗ … ⊗ P_{c-1-j}
+    Sfull = suf_prefix[::-1]                                     # S'_i = P_{c-1}…P_i
+    Jb = jnp.concatenate(
+        [
+            jnp.minimum(jnp.einsum("cji,j->ci", Sfull[1:], F), 1.0),  # transpose apply
+            F[None],
+        ],
+        axis=0,
+    )                                                            # (c, ℓp): Ĵ for chunk i
+    return Jf, Jb
+
+
+def _parse_core(
+    N: jnp.ndarray, I: jnp.ndarray, F: jnp.ndarray, chunks: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full three-phase parse of (c, k) class chunks → packed columns.
+
+    Returns (col0 packed (W,), cols packed (c, k, W)).
+    """
+    P = jax.vmap(lambda ch: reach_chunk(N, ch))(chunks)          # (c, ℓp, ℓp)
+    Jf, Jb = _entries_from_products(P, I, F)
+    M, beta0 = jax.vmap(lambda ch, ef, eb: build_merge_chunk(N, ch, ef, eb))(
+        chunks, Jf, Jb
+    )
+    col0 = I * beta0[0]
+    return pack_columns_u32(col0), pack_columns_u32(M)
+
+
+_parse_jit = jax.jit(_parse_core)
+
+
+class ParserEngine:
+    """Single-host engine: jit-compiled chunked parallel parsing."""
+
+    def __init__(
+        self,
+        matrices_or_table,
+        *,
+        lane_pad: int = 32,
+    ):
+        if isinstance(matrices_or_table, SegmentTable):
+            matrices = build_matrices(matrices_or_table)
+        else:
+            matrices = matrices_or_table
+        self.matrices = matrices
+        self.table = matrices.table
+        self.tables = EngineTables.from_matrices(matrices, lane_pad=lane_pad)
+
+    # ------------------------------------------------------------- helpers
+
+    def classes_of_text(self, text) -> np.ndarray:
+        if isinstance(text, (bytes, str)):
+            return self.matrices.classes_of_text(text)
+        return np.asarray(text, dtype=np.int32)
+
+    def pad_chunks(self, classes: np.ndarray, n_chunks: int) -> np.ndarray:
+        """Pad with the identity PAD class to equal static chunks (DESIGN §2)."""
+        n = len(classes)
+        c = max(1, n_chunks)
+        k = max(1, -(-n // c))
+        padded = np.full(c * k, self.tables.pad_class, dtype=np.int32)
+        padded[:n] = classes
+        return padded.reshape(c, k)
+
+    # --------------------------------------------------------------- parse
+
+    def parse(self, text, n_chunks: int = 8) -> SLPF:
+        classes = self.classes_of_text(text)
+        n = len(classes)
+        if n == 0:
+            col = (self.matrices.I & self.matrices.F)[None, :]
+            return SLPF(table=self.table, columns=col, classes=classes)
+        chunks = self.pad_chunks(classes, n_chunks)
+        col0, cols = _parse_jit(
+            self.tables.N, self.tables.I, self.tables.F, jnp.asarray(chunks)
+        )
+        return self._assemble(col0, cols, classes)
+
+    def _assemble(self, col0, cols, classes) -> SLPF:
+        n = len(classes)
+        W = cols.shape[-1]
+        packed = np.concatenate(
+            [np.asarray(col0)[None], np.asarray(cols).reshape(-1, W)[:n]], axis=0
+        )
+        columns = unpack_bits(packed, self.tables.ell, axis=-1)
+        return SLPF(table=self.table, columns=columns, classes=classes)
+
+    def count_accepting(self, text, n_chunks: int = 8) -> int:
+        return self.parse(text, n_chunks).count_trees()
+
+
+# ----------------------------------------------------- sharded (multi-pod)
+
+
+def sharded_parse_step(
+    N: jnp.ndarray,
+    I: jnp.ndarray,
+    F: jnp.ndarray,
+    local_chunks: jnp.ndarray,
+    axis_names: Sequence[str],
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-device body (inside shard_map) of the multi-pod parser.
+
+    ``local_chunks``: (f, k) — this device's f fragments.  Phases:
+      reach   local (f chunk products),
+      join    ONE all_gather of (c·f, ℓp, ℓp) summaries + replicated scan,
+      build&merge local, emitting packed columns.
+    Returns (col0 packed — valid on global chunk 0's device, cols (f, k, W)).
+    """
+    P_local = jax.vmap(lambda ch: reach_chunk(N, ch))(local_chunks)  # (f, ℓp, ℓp)
+    gathered = jax.lax.all_gather(P_local, tuple(axis_names), axis=0, tiled=False)
+    cf = P_local.shape[0]
+    P_all = gathered.reshape((-1,) + P_local.shape[1:])              # (c·f, ℓp, ℓp)
+    Jf_all, Jb_all = _entries_from_products(P_all, I, F)
+
+    idx = jnp.int32(0)
+    for name in axis_names:
+        idx = idx * jax.lax.axis_size(name) + jax.lax.axis_index(name)
+    sl = idx * cf
+    Jf = jax.lax.dynamic_slice_in_dim(Jf_all, sl, cf, 0)
+    Jb = jax.lax.dynamic_slice_in_dim(Jb_all, sl, cf, 0)
+
+    M, beta0 = jax.vmap(lambda ch, ef, eb: build_merge_chunk(N, ch, ef, eb))(
+        local_chunks, Jf, Jb
+    )
+    col0 = I * beta0[0]  # meaningful on the device holding global chunk 0
+    return pack_columns_u32(col0), pack_columns_u32(M)
+
+
+def make_sharded_parser(tables: EngineTables, mesh, axis_names: Sequence[str], frags: int = 1):
+    """Build the jitted multi-device parse program over ``mesh``.
+
+    Input ``chunks``: (c_total·frags, k) int32, sharded over ``axis_names`` on
+    dim 0.  Output columns sharded the same way (SLPF stays distributed; App. C
+    packing applied on device).
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    spec_in = P(tuple(axis_names))
+    body = functools.partial(sharded_parse_step, axis_names=tuple(axis_names))
+
+    @functools.partial(
+        jax.shard_map,
+        mesh=mesh,
+        in_specs=(P(), P(), P(), spec_in),
+        out_specs=(P(), spec_in),
+        check_vma=False,  # scan carries start device-invariant, become varying
+    )
+    def program(N, I, F, chunks):
+        col0, cols = body(N, I, F, chunks)
+        # col0 from every device; keep chunk-0's via psum of masked values.
+        idx = jnp.int32(0)
+        for name in axis_names:
+            idx = idx * jax.lax.axis_size(name) + jax.lax.axis_index(name)
+        col0 = jnp.where(idx == 0, col0, jnp.zeros_like(col0))
+        col0 = jax.lax.psum(col0, tuple(axis_names))
+        return col0, cols
+
+    in_shardings = (
+        NamedSharding(mesh, P()),
+        NamedSharding(mesh, P()),
+        NamedSharding(mesh, P()),
+        NamedSharding(mesh, spec_in),
+    )
+    out_shardings = (NamedSharding(mesh, P()), NamedSharding(mesh, spec_in))
+    return jax.jit(program, in_shardings=in_shardings, out_shardings=out_shardings)

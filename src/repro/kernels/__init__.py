@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the parser's two hot loops (DESIGN §2).
+
+The paper's compute hot-spots are the reach phase (per-chunk ME-DFA
+speculation ≡ Boolean-semiring matrix chain product) and the fused
+builder&merger (Fig. 14).  Each kernel ships with:
+
+  * ``<name>.py``  — ``pl.pallas_call`` + explicit BlockSpec VMEM tiling;
+  * ``ops.py``     — jit'd public wrappers (interpret=True on CPU);
+  * ``ref.py``     — pure-jnp oracles the kernels are verified against.
+"""

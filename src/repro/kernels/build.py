@@ -1,0 +1,106 @@
+"""Fused builder&merger kernels (paper Fig. 14) — one chunk, one M buffer.
+
+Two sequential ``pallas_call``s sharing one buffer via input/output aliasing
+(the paper's single-array memory optimization, expressed safely for TPU —
+Pallas output blocks are not reloaded on revisit, so the read-modify-write
+backward pass must take M as an aliased *input*):
+
+  build_fwd   forward frontier mat-vec scan from the join entry ``J_{i-1}``;
+              grid step t writes ``M[t] = clamp(N[x_t] @ frontier)``.
+  merge_bwd   backward scan with *transposed* matrices from the next chunk's
+              backward entry ``Ĵ_{i+1}``; grid step s visits t = k-1-s and
+              ANDs in place: ``M[t] *= β_{t+1}``, then ``β ← N[x_t]ᵀ β``.
+
+Transition matrices are scalar-prefetch-selected per step (the chunk's class
+ids drive the BlockSpec index_map), so the next N block is DMA'd while the
+current mat-vec runs — the DMA/compute overlap a CPU table-walk cannot express.
+The frontier is a (1, ℓ) VMEM scratch carried across grid steps.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _build_fwd_kernel(ids_ref, n_ref, jf_ref, m_ref, fr_ref):
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        fr_ref[...] = jf_ref[...]
+
+    # frontier <- clamp(N[x_t] @ frontier)  (row-vector form: fr @ Nᵀ)
+    nf = jnp.minimum(
+        jnp.dot(fr_ref[...], n_ref[0].T, preferred_element_type=jnp.float32), 1.0
+    )
+    fr_ref[...] = nf
+    m_ref[...] = nf.astype(m_ref.dtype)
+
+
+def _merge_bwd_kernel(ids_ref, n_ref, jb_ref, m_in_ref, m_ref, fr_ref):
+    s = pl.program_id(0)
+
+    @pl.when(s == 0)
+    def _init():
+        fr_ref[...] = jb_ref[...]
+
+    # visiting t = k-1-s:  M[t] *= β_{t+1};  β ← clamp(N[x_t]ᵀ @ β)
+    m_ref[...] = m_in_ref[...] * fr_ref[...].astype(m_ref.dtype)
+    nb = jnp.minimum(
+        jnp.dot(fr_ref[...], n_ref[0], preferred_element_type=jnp.float32), 1.0
+    )
+    fr_ref[...] = nb
+
+
+def build_merge_chunk(
+    N: jnp.ndarray,          # (A+1, ℓ, ℓ) {0,1} — PAD class = identity
+    ids: jnp.ndarray,        # (k,) int32 char classes of the chunk
+    entry_f: jnp.ndarray,    # (ℓ,) forward join entry J_{i-1}
+    entry_b: jnp.ndarray,    # (ℓ,) backward join entry Ĵ_{i+1}
+    *,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Clean SLPF columns M (k, ℓ) of one chunk (paper Fig. 14)."""
+    _, ell, _ = N.shape
+    k = ids.shape[0]
+
+    fwd_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(k,),
+        in_specs=[
+            pl.BlockSpec((1, ell, ell), lambda t, ids: (ids[t], 0, 0)),
+            pl.BlockSpec((1, ell), lambda t, ids: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, ell), lambda t, ids: (t, 0)),
+        scratch_shapes=[pltpu.VMEM((1, ell), jnp.float32)],
+    )
+    m_fwd = pl.pallas_call(
+        _build_fwd_kernel,
+        grid_spec=fwd_spec,
+        out_shape=jax.ShapeDtypeStruct((k, ell), N.dtype),
+        interpret=interpret,
+    )(ids, N, entry_f[None])
+
+    bwd_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(k,),
+        in_specs=[
+            pl.BlockSpec((1, ell, ell), lambda s, ids: (ids[k - 1 - s], 0, 0)),
+            pl.BlockSpec((1, ell), lambda s, ids: (0, 0)),
+            pl.BlockSpec((1, ell), lambda s, ids: (k - 1 - s, 0)),   # M (aliased in)
+        ],
+        out_specs=pl.BlockSpec((1, ell), lambda s, ids: (k - 1 - s, 0)),
+        scratch_shapes=[pltpu.VMEM((1, ell), jnp.float32)],
+    )
+    return pl.pallas_call(
+        _merge_bwd_kernel,
+        grid_spec=bwd_spec,
+        out_shape=jax.ShapeDtypeStruct((k, ell), N.dtype),
+        input_output_aliases={3: 0},  # M buffer written in place (+1 for prefetch arg)
+        interpret=interpret,
+    )(ids, N, entry_b[None], m_fwd)

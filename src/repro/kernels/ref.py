@@ -1,0 +1,95 @@
+"""Pure-jnp oracles for the Pallas kernels (verified in tests/test_kernels.py).
+
+These mirror the engine's reference implementations with the kernels' exact
+signatures, so every kernel sweep asserts ``kernel(...) ≈ ref(...)``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def semiring_matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return jnp.minimum(
+        jnp.matmul(a.astype(jnp.float32), b.astype(jnp.float32)), 1.0
+    ).astype(a.dtype)
+
+
+def reach_chunk_product_ref(N: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    ell = N.shape[-1]
+
+    def step(P, cls):
+        return jnp.minimum(
+            jnp.dot(N[cls].astype(jnp.float32), P, preferred_element_type=jnp.float32),
+            1.0,
+        ), None
+
+    P, _ = jax.lax.scan(step, jnp.eye(ell, dtype=jnp.float32), ids)
+    return P.astype(N.dtype)
+
+
+def flash_attention_ref(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+    *, causal: bool = True, window=None,
+) -> jnp.ndarray:
+    """Naive softmax attention oracle: q/k/v (b, L, h, hd), kv == q heads."""
+    import math
+
+    b, L, h, hd = q.shape
+    Lk = k.shape[1]
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32)
+    s = s / math.sqrt(hd)
+    qpos = jnp.arange(L)[:, None]
+    kpos = jnp.arange(Lk)[None, :]
+    mask = jnp.ones((L, Lk), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum(
+        "bhqk,bkhd->bqhd", p.astype(v.dtype), v, preferred_element_type=jnp.float32
+    ).astype(q.dtype)
+
+
+def ssd_chunk_ref(xdt, cs, B, C, S_prev):
+    """Oracle for the fused SSD intra-chunk kernel (per flattened program)."""
+    q = xdt.shape[1]
+    csq = cs[..., 0]                                            # (P, q)
+    Lm = csq[:, :, None] - csq[:, None, :]
+    iota = jnp.arange(q)
+    Lmask = jnp.where(iota[:, None] >= iota[None, :], jnp.exp(Lm), 0.0)
+    CB = jnp.einsum("pin,pjn->pij", C.astype(jnp.float32), B.astype(jnp.float32))
+    y_intra = jnp.einsum("pij,pjh->pih", Lmask * CB, xdt.astype(jnp.float32))
+    y_inter = jnp.exp(csq)[..., None] * jnp.einsum(
+        "pin,phn->pih", C.astype(jnp.float32), S_prev.astype(jnp.float32)
+    )
+    w = jnp.exp(csq[:, -1:] - csq)                              # (P, q)
+    S_c = jnp.einsum("pqn,pqh->pnh", w[..., None] * B.astype(jnp.float32),
+                     xdt.astype(jnp.float32))
+    return y_intra + y_inter, S_c
+
+
+def build_merge_chunk_ref(
+    N: jnp.ndarray, ids: jnp.ndarray, entry_f: jnp.ndarray, entry_b: jnp.ndarray
+) -> jnp.ndarray:
+    Nf = N.astype(jnp.float32)
+
+    def fstep(v, cls):
+        nv = jnp.minimum(Nf[cls] @ v, 1.0)
+        return nv, nv
+
+    _, fwd = jax.lax.scan(fstep, entry_f.astype(jnp.float32), ids)
+
+    def bstep(v, cls):
+        nv = jnp.minimum(Nf[cls].T @ v, 1.0)
+        return nv, nv
+
+    _, bwd_rev = jax.lax.scan(bstep, entry_b.astype(jnp.float32), ids[::-1])
+    bwd = bwd_rev[::-1]
+    bwd_for_merge = jnp.concatenate(
+        [bwd[1:], entry_b.astype(jnp.float32)[None]], axis=0
+    )
+    return (fwd * bwd_for_merge).astype(N.dtype)

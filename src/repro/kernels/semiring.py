@@ -1,0 +1,70 @@
+"""Boolean OR-AND semiring matmul on the MXU — the reach phase's combine op.
+
+``C = clamp(A ⊗ B)`` over {0,1} matrices: ``matmul`` with fp32 accumulation
+followed by ``min(acc, 1)`` — exact (counts never exceed ℓ < 2²⁴).  This is
+the TPU-native replacement for the paper's per-entry DFA lookups: one matrix
+product evaluates all ℓ speculative ME-DFA entries simultaneously (DESIGN §2).
+
+Tiling: grid (M/bm, N/bn, K/bk); A tiles (bm, bk), B tiles (bk, bn) in VMEM,
+fp32 accumulator lives in a VMEM scratch across the K-loop (the innermost grid
+dim is sequential on TPU), clamped and written on the last K step.  Block
+sizes default to 128 — MXU-aligned (128×128 systolic array).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _semiring_mm_kernel(a_ref, b_ref, out_ref, acc_ref, *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k - 1)
+    def _done():
+        out_ref[...] = jnp.minimum(acc_ref[...], 1.0).astype(out_ref.dtype)
+
+
+def semiring_matmul(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Boolean-semiring product of (m, k) ⊗ (k, n) {0,1} matrices."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    bm, bk, bn = min(bm, m), min(bk, k), min(bn, n)
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, (
+        f"shapes ({m},{k})x({k},{n}) must tile by ({bm},{bk},{bn}); "
+        "pad with EngineTables(lane_pad=128)"
+    )
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_semiring_mm_kernel, n_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

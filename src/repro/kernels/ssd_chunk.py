@@ -1,0 +1,95 @@
+"""Fused SSD intra-chunk kernel (Pallas TPU) — Mamba-2's reach/build hot spot.
+
+One program computes, for one (batch, head, chunk) triple, entirely in VMEM:
+
+    CB   = C Bᵀ                      (q, q)   MXU
+    L    = exp(cs_i − cs_j) · [i≥j]  (q, q)   VPU (block-local iota mask)
+    y    = (L ∘ CB) · xdt  +  exp(cs) ∘ (C · S_prevᵀ)      — intra + inter
+    S_c  = (exp(cs_last − cs) ∘ B)ᵀ · xdt                   — state contribution
+
+which is exactly the "reach" (chunk summary S_c) and "build" (output y given
+the joined entry state S_prev) of the paper's schema on the SSD monoid
+(DESIGN §4).  The pure-jnp path (models/mamba.py) materializes L, CB and the
+masked product to HBM between fusions; here they never leave VMEM.
+
+Footprint per program (q=256, hp=64, n=128, f32): two (q,q) tiles + operands
+≈ 0.9 MiB — comfortably inside VMEM; all matmul dims are 128-multiples.
+
+The inter-chunk join (exclusive scan of (decay, S_c) pairs) stays in
+``core/scan.py`` — it is the cross-device phase and belongs to the runtime,
+not the kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_chunk_kernel(xdt_ref, cs_ref, b_ref, c_ref, sprev_ref, y_ref, snew_ref):
+    q, hp = xdt_ref.shape
+    n = b_ref.shape[1]
+    cs = cs_ref[...]                                       # (q, 1) f32
+    # decay-masked quadratic form
+    Lm = cs - cs.reshape(1, q)                             # cs_i - cs_j
+    iota_i = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    iota_j = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    L = jnp.where(iota_i >= iota_j, jnp.exp(Lm), 0.0)      # (q, q)
+    CB = jax.lax.dot_general(
+        c_ref[...], b_ref[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                      # (q, q)
+    y_intra = jax.lax.dot_general(
+        (L * CB).astype(xdt_ref.dtype), xdt_ref[...],
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+    )                                                      # (q, hp)
+    # inter-chunk: exp(cs_i) · (C_i · S_prevᵀ)
+    y_inter = jnp.exp(cs) * jax.lax.dot_general(
+        c_ref[...], sprev_ref[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                      # (q, hp)
+    y_ref[...] = (y_intra + y_inter).astype(y_ref.dtype)
+    # state contribution: S_c = (w ∘ B)ᵀ · xdt   with w_j = exp(cs_last − cs_j)
+    w = jnp.exp(cs[q - 1, 0] - cs)                         # (q, 1)
+    snew_ref[...] = jax.lax.dot_general(
+        (w * b_ref[...].astype(jnp.float32)).astype(xdt_ref.dtype), xdt_ref[...],
+        (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+    ).astype(snew_ref.dtype)                               # (n, hp)
+
+
+def ssd_chunk(
+    xdt: jnp.ndarray,      # (P, q, hp) — P = b·nc·h flattened programs
+    cs: jnp.ndarray,       # (P, q, 1) f32 cumulative decay logs
+    B: jnp.ndarray,        # (P, q, n)
+    C: jnp.ndarray,        # (P, q, n)
+    S_prev: jnp.ndarray,   # (P, hp, n) joined entry states
+    *,
+    interpret: bool = False,
+):
+    """Returns (y (P, q, hp), S_c (P, n, hp))."""
+    P, q, hp = xdt.shape
+    n = B.shape[-1]
+    return pl.pallas_call(
+        _ssd_chunk_kernel,
+        grid=(P,),
+        in_specs=[
+            pl.BlockSpec((None, q, hp), lambda p: (p, 0, 0)),
+            pl.BlockSpec((None, q, 1), lambda p: (p, 0, 0)),
+            pl.BlockSpec((None, q, n), lambda p: (p, 0, 0)),
+            pl.BlockSpec((None, q, n), lambda p: (p, 0, 0)),
+            pl.BlockSpec((None, hp, n), lambda p: (p, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, q, hp), lambda p: (p, 0, 0)),
+            pl.BlockSpec((None, n, hp), lambda p: (p, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((P, q, hp), jnp.float32),
+            jax.ShapeDtypeStruct((P, n, hp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xdt, cs, B, C, S_prev)

@@ -1,0 +1,410 @@
+"""Trip-count-aware static analysis of optimized (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` counts each ``while`` body ONCE — with
+scan-over-layers and microbatch accumulation that under-counts FLOPs by the
+product of all trip counts (≈ 350× for a 22-layer, 16-microbatch step).  This
+analyzer walks the computation graph of ``compiled.as_text()`` and returns
+trip-count-weighted totals, per device (the text is the partitioned module):
+
+  flops       2·M·N·K for dot ops (the compute-roofline term; elementwise ops
+              are counted at 1 flop/output element — negligible next to dots
+              but keeps vector-bound programs honest);
+  bytes       HBM-traffic model: for every top-level op of a computation,
+              operand bytes + output bytes; fusions count only their
+              parameters/outputs (internals stay in registers/VMEM) — the
+              memory-roofline term;
+  collectives output bytes per collective kind (all-gather / all-reduce /
+              reduce-scatter / all-to-all / collective-permute), trip-aware —
+              the collective-roofline term.
+
+Loop trip counts: scans lower to ``while`` whose condition compares the
+induction variable against a constant; we take the largest integer constant in
+the condition computation (exact for lax.scan/fori_loop with static bounds;
+falls back to 1 and records the loop in ``unknown_trips``).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "u2": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16, "token": 0,
+    "opaque": 0, "tuple": 0,
+}
+
+COLLECTIVE_KINDS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_ARRAY_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+# op line:  %name = TYPE opcode(...)(operands), attrs
+# NB: tuple result types may contain /*index=5*/ comments (with '='), but never
+# nested parens — so the type is either "( ... first ')' )" or a single token.
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)\((.*)$"
+)
+# computation headers sit at column 0 (optionally "ENTRY "), contain "->",
+# and end with "{"; params may contain nested parens, so match loosely.
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+
+
+def _array_elems_bytes(type_str: str) -> Tuple[int, int]:
+    """(total elements, total bytes) over all arrays in a type string."""
+    elems = 0
+    byts = 0
+    for m in _ARRAY_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems += n
+        byts += n * _DTYPE_BYTES[dt]
+    return elems, byts
+
+
+@dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str                      # operand list + attributes (raw)
+    operands: List[str] = field(default_factory=list)
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: List[Op] = field(default_factory=list)
+    shapes: Dict[str, str] = field(default_factory=dict)   # %name -> type str
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            if line and not line.startswith((" ", "\t")) and line.endswith("{") and "->" in line:
+                m = _COMP_HDR_RE.match(line)
+                if m:
+                    cur = Computation(name=m.group(1))
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        op = Op(name=m.group(1), type_str=m.group(2), opcode=m.group(3), rest=m.group(4))
+        # operand names: %foo tokens before the first "), " attr boundary
+        paren = op.rest.split("),")[0]
+        op.operands = re.findall(r"%([\w.\-]+)", paren)
+        cur.ops.append(op)
+        cur.shapes[op.name] = op.type_str
+    return comps
+
+
+def _called_comps(op: Op) -> List[str]:
+    out = []
+    for key in ("calls=", "body=", "condition=", "to_apply=", "branch_computations={"):
+        for m in re.finditer(re.escape(key) + r"%?([\w.\-{}, %]+)", op.rest):
+            blob = m.group(1)
+            out.extend(re.findall(r"[\w.\-]+", blob.split(")")[0].split("}")[0]))
+    return out
+
+
+_ELEMENTWISE_ZERO = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast", "reshape",
+    "broadcast", "transpose", "copy", "copy-start", "copy-done", "slice",
+    "dynamic-slice", "dynamic-update-slice", "concatenate", "pad", "reverse",
+    "iota", "gather", "scatter", "sort", "rng", "rng-bit-generator",
+    "after-all", "partition-id", "replica-id", "custom-call", "convert",
+    "reduce", "select", "compare", "while", "conditional", "call", "fusion",
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "optimization-barrier", "domain", "send", "recv",
+    "send-done", "recv-done", "infeed", "outfeed",
+}
+
+
+def _dot_flops(op: Op, shapes: Dict[str, str]) -> float:
+    out_elems, _ = _array_elems_bytes(op.type_str)
+    k = 1
+    mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+    if mc and op.operands:
+        lhs_type = shapes.get(op.operands[0], "")
+        am = _ARRAY_RE.search(lhs_type)
+        if am and am.group(2):
+            dims = [int(d) for d in am.group(2).split(",")]
+            for ci in mc.group(1).split(","):
+                if ci != "" and int(ci) < len(dims):
+                    k *= dims[int(ci)]
+    return 2.0 * out_elems * k
+
+
+def _conv_flops(op: Op, shapes: Dict[str, str]) -> float:
+    # rough: 2 * output elems * (kernel spatial * in_features)
+    out_elems, _ = _array_elems_bytes(op.type_str)
+    if len(op.operands) >= 2:
+        _, kb = _array_elems_bytes(shapes.get(op.operands[1], ""))
+        ke, _ = _array_elems_bytes(shapes.get(op.operands[1], ""))
+        return 2.0 * out_elems * max(ke, 1) ** 0.5  # conservative
+    return 2.0 * out_elems
+
+
+@dataclass
+class HloStats:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = field(default_factory=lambda: {k: 0.0 for k in COLLECTIVE_KINDS})
+    coll_count: float = 0.0
+    unknown_trips: int = 0
+
+    def scaled(self, mult: float) -> "HloStats":
+        return HloStats(
+            flops=self.flops * mult,
+            bytes=self.bytes * mult,
+            coll={k: v * mult for k, v in self.coll.items()},
+            coll_count=self.coll_count * mult,
+            unknown_trips=self.unknown_trips,
+        )
+
+    def add(self, other: "HloStats") -> None:
+        self.flops += other.flops
+        self.bytes += other.bytes
+        for k, v in other.coll.items():
+            self.coll[k] += v
+        self.coll_count += other.coll_count
+        self.unknown_trips += other.unknown_trips
+
+    @property
+    def coll_bytes(self) -> float:
+        return sum(self.coll.values())
+
+
+class Analyzer:
+    def __init__(self, comps: Dict[str, Computation]):
+        self.comps = comps
+        self._memo: Dict[str, HloStats] = {}
+        self._trip_memo: Dict[str, int] = {}
+
+    # ---- trip count of a while given its condition computation ------------
+    def trip_count(self, cond_name: str) -> Optional[int]:
+        if cond_name in self._trip_memo:
+            return self._trip_memo[cond_name]
+        comp = self.comps.get(cond_name)
+        best: Optional[int] = None
+        if comp is not None:
+            consts = []
+            for op in comp.ops:
+                if op.opcode == "constant":
+                    m = re.search(r"constant\((-?\d+)\)", "constant(" + op.rest)
+                    if m:
+                        consts.append(int(m.group(1)))
+                if op.opcode == "fusion":
+                    for sub in _called_comps(op):
+                        c2 = self.comps.get(sub)
+                        if c2:
+                            for o2 in c2.ops:
+                                if o2.opcode == "constant":
+                                    m = re.search(r"constant\((-?\d+)\)", "constant(" + o2.rest)
+                                    if m:
+                                        consts.append(int(m.group(1)))
+            pos = [c for c in consts if c > 0]
+            if pos:
+                best = max(pos)
+        if best is not None:
+            self._trip_memo[cond_name] = best
+        return best
+
+    # ---- flops INSIDE a computation (recursing into fusions) --------------
+    def _fusion_flops(self, comp_name: str) -> float:
+        comp = self.comps.get(comp_name)
+        if comp is None:
+            return 0.0
+        total = 0.0
+        for op in comp.ops:
+            if op.opcode == "dot":
+                total += _dot_flops(op, comp.shapes)
+            elif op.opcode == "convolution":
+                total += _conv_flops(op, comp.shapes)
+            elif op.opcode == "fusion" or op.opcode == "call":
+                for sub in _called_comps(op):
+                    total += self._fusion_flops(sub)
+            elif op.opcode not in _ELEMENTWISE_ZERO:
+                elems, _ = _array_elems_bytes(op.type_str)
+                total += float(elems)
+            elif op.opcode in ("reduce", "select", "compare", "convert"):
+                elems, _ = _array_elems_bytes(op.type_str)
+                total += float(elems)
+        return total
+
+    # ---- slice-aware byte accounting ---------------------------------------
+    # Scan carries lower to dynamic-update-slice on buffer-aliased arrays and
+    # stacked weights are read via dynamic-slice: true HBM traffic per
+    # iteration is the SLICE, not the whole buffer.  Counting fusion operands
+    # wholesale would overcount loop programs by O(trip_count).
+
+    def _param_names_by_index(self, called: Computation) -> Dict[int, str]:
+        out: Dict[int, str] = {}
+        for o in called.ops:
+            if o.opcode == "parameter":
+                m = re.match(r"\s*(\d+)\)", o.rest)
+                if m:
+                    out[int(m.group(1))] = o.name
+        return out
+
+    _SLICE_READERS = {"dynamic-slice", "gather"}
+
+    def _fusion_bytes(self, op: Op, comp: Computation) -> float:
+        called_names = _called_comps(op)
+        called = self.comps.get(called_names[0]) if called_names else None
+        _, out_full = _array_elems_bytes(op.type_str)
+        if called is None:
+            ib = sum(
+                _array_elems_bytes(comp.shapes.get(o, ""))[1] for o in op.operands
+            )
+            return ib + out_full
+        params = self._param_names_by_index(called)
+        reads = 0.0
+        for j, operand in enumerate(op.operands):
+            _, full = _array_elems_bytes(comp.shapes.get(operand, ""))
+            pname = params.get(j)
+            if pname is None:
+                reads += full
+                continue
+            consumers = [o for o in called.ops if pname in o.operands]
+            if consumers and all(o.opcode in self._SLICE_READERS for o in consumers):
+                reads += sum(_array_elems_bytes(o.type_str)[1] for o in consumers)
+            elif consumers and all(
+                o.opcode == "dynamic-update-slice" and o.operands and o.operands[0] == pname
+                for o in consumers
+            ):
+                pass  # in-place updated buffer: never read, only sliced-into
+            elif not consumers:
+                pass  # dead operand — no traffic
+            else:
+                reads += full
+        writes = float(out_full)
+        for o in called.ops:
+            if o.opcode == "dynamic-update-slice":
+                _, buf = _array_elems_bytes(o.type_str)
+                upd = 0
+                if len(o.operands) > 1:
+                    _, upd = _array_elems_bytes(called.shapes.get(o.operands[1], ""))
+                first = _ARRAY_RE.search(o.type_str)
+                if first and first.group(0) in op.type_str:
+                    writes -= buf - upd  # in-place update: write the slice only
+            elif o.opcode == "scatter" and len(o.operands) > 2:
+                _, buf = _array_elems_bytes(o.type_str)
+                _, upd = _array_elems_bytes(called.shapes.get(o.operands[2], ""))
+                first = _ARRAY_RE.search(o.type_str)
+                if first and first.group(0) in op.type_str:
+                    writes -= buf - upd
+        return reads + max(writes, 0.0)
+
+    def _leaf_bytes(self, op: Op, comp: Computation) -> float:
+        oc = op.opcode
+        _, ob = _array_elems_bytes(op.type_str)
+        if oc in ("dynamic-slice", "gather"):
+            return 2.0 * ob  # read slice + write slice (indices negligible)
+        if oc == "dynamic-update-slice":
+            upd = 0
+            if len(op.operands) > 1:
+                _, upd = _array_elems_bytes(comp.shapes.get(op.operands[1], ""))
+            return 2.0 * upd
+        if oc == "scatter":
+            upd = 0
+            if len(op.operands) > 2:
+                _, upd = _array_elems_bytes(comp.shapes.get(op.operands[2], ""))
+            return 2.0 * upd
+        if oc == "fusion":
+            return self._fusion_bytes(op, comp)
+        ib = sum(_array_elems_bytes(comp.shapes.get(o, ""))[1] for o in op.operands)
+        return float(ib + ob)
+
+    # ---- stats of one computation's top level ------------------------------
+    def analyze(self, comp_name: str) -> HloStats:
+        if comp_name in self._memo:
+            return self._memo[comp_name]
+        self._memo[comp_name] = HloStats()  # cycle guard
+        comp = self.comps.get(comp_name)
+        stats = HloStats()
+        if comp is None:
+            return stats
+        for op in comp.ops:
+            oc = op.opcode
+            if oc in ("parameter", "constant", "get-tuple-element", "tuple",
+                      "bitcast", "after-all", "iota", "partition-id", "replica-id"):
+                continue
+            if oc == "while":
+                mb = re.search(r"body=%?([\w.\-]+)", op.rest)
+                mc = re.search(r"condition=%?([\w.\-]+)", op.rest)
+                body = mb.group(1) if mb else None
+                cond = mc.group(1) if mc else None
+                # XLA records static trip counts in backend_config — exact.
+                mt = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', op.rest)
+                trips = int(mt.group(1)) if mt else None
+                if trips is None and cond:
+                    trips = self.trip_count(cond)
+                if trips is None:
+                    trips = 1
+                    stats.unknown_trips += 1
+                inner = HloStats()
+                if body:
+                    inner.add(self.analyze(body))
+                stats.add(inner.scaled(trips))
+                continue
+            if oc in ("call", "conditional", "async-start"):
+                for sub in _called_comps(op):
+                    stats.add(self.analyze(sub))
+                continue
+            # leaf-ish op: slice-aware byte accounting
+            _, ob = _array_elems_bytes(op.type_str)
+            base = oc.replace("-start", "")
+            if base in COLLECTIVE_KINDS and not oc.endswith("-done"):
+                stats.coll[base] += ob
+                stats.coll_count += 1
+                stats.bytes += self._leaf_bytes(op, comp)
+                continue
+            if oc.endswith("-done"):
+                continue
+            stats.bytes += self._leaf_bytes(op, comp)
+            if oc == "dot":
+                stats.flops += _dot_flops(op, comp.shapes)
+            elif oc == "convolution":
+                stats.flops += _conv_flops(op, comp.shapes)
+            elif oc == "fusion":
+                for sub in _called_comps(op):
+                    stats.flops += self._fusion_flops(sub)
+            elif oc not in _ELEMENTWISE_ZERO:
+                elems, _ = _array_elems_bytes(op.type_str)
+                stats.flops += float(elems)
+        self._memo[comp_name] = stats
+        return stats
+
+
+def entry_name(comps: Dict[str, Computation], text: str) -> Optional[str]:
+    m = re.search(r"^ENTRY\s+%?([\w.\-]+)", text, re.MULTILINE)
+    if m:
+        return m.group(1)
+    return next(iter(comps)) if comps else None
+
+
+def analyze_hlo_text(text: str) -> HloStats:
+    comps = parse_hlo(text)
+    entry = entry_name(comps, text)
+    if entry is None:
+        return HloStats()
+    return Analyzer(comps).analyze(entry)

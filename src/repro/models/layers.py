@@ -1,0 +1,314 @@
+"""Transformer building blocks — pure-functional JAX, sharding-annotated.
+
+Conventions:
+  * activations: (batch, seq, d_model) in ``cfg.dtype`` (bf16 by default);
+  * params: flat nested dicts, declared via ``ParamDecl`` so that shapes /
+    logical sharding axes / initializers live in one place (``declare``-style);
+  * attention is GQA with RoPE and optional sliding window; the training /
+    prefill path uses a **blockwise (flash-style) attention** written in pure
+    jnp — ``lax.scan`` over KV blocks with an online-softmax carry — so that
+    32k-token prefill never materializes an (L, L) score matrix;
+  * head padding: when head counts do not divide tensor-parallel degree, query
+    heads are zero-padded to the next multiple (kv heads padded by the same
+    group ratio) and the output-projection rows of padded heads are zero, so
+    the math is exact (DESIGN §6).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+
+# ------------------------------------------------------------ declarations
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDecl:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]   # logical sharding axis per dim
+    init: str = "normal"                 # normal | zeros | ones | scaled
+    scale: float = 0.02
+
+    def materialize(self, key, dtype) -> jnp.ndarray:
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, dtype)
+        scale = self.scale
+        if self.init == "scaled":  # 1/sqrt(fan_in) on the penultimate dim
+            fan_in = self.shape[-2] if len(self.shape) >= 2 else self.shape[-1]
+            scale = 1.0 / math.sqrt(fan_in)
+        return (scale * jax.random.normal(key, self.shape)).astype(dtype)
+
+
+def tree_init(decls: Any, key, dtype) -> Any:
+    """Materialize a pytree of ParamDecl with split keys (deterministic order)."""
+    leaves, treedef = jax.tree.flatten(
+        decls, is_leaf=lambda x: isinstance(x, ParamDecl)
+    )
+    keys = jax.random.split(key, len(leaves))
+    vals = [d.materialize(k, dtype) for d, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def tree_abstract(decls: Any, dtype) -> Any:
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dtype),
+        decls,
+        is_leaf=lambda x: isinstance(x, ParamDecl),
+    )
+
+
+def tree_logical(decls: Any) -> Any:
+    return jax.tree.map(
+        lambda d: d.logical, decls, is_leaf=lambda x: isinstance(x, ParamDecl)
+    )
+
+
+# ----------------------------------------------------------------- norms
+
+
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(dt) * w
+
+
+# ------------------------------------------------------------------ RoPE
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    freqs = rope_freqs(x.shape[-1], theta)                      # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs   # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------- attention
+
+
+def _repeat_kv(k: jnp.ndarray, groups: int) -> jnp.ndarray:
+    """(b, s, kv, hd) → (b, s, kv*groups, hd) by head repetition (GQA)."""
+    if groups == 1:
+        return k
+    b, s, kv, hd = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, kv, groups, hd)).reshape(
+        b, s, kv * groups, hd
+    )
+
+
+def blockwise_attention(
+    q: jnp.ndarray,                # (b, Lq, h, hd)   h = query heads
+    k: jnp.ndarray,                # (b, Lk, kv, hd)  kv heads (NOT repeated)
+    v: jnp.ndarray,
+    *,
+    groups: int = 1,               # h = kv * groups (GQA); kv index = h // groups
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,             # absolute position of q[0] minus k[0]
+    q_block: int = 512,
+    k_block: int = 1024,
+    softcap: Optional[float] = None,
+    p_dtype=jnp.bfloat16,          # probability-buffer dtype (§Perf H3)
+) -> jnp.ndarray:
+    """Flash-style attention in pure jnp: scan over KV blocks with an
+    online-softmax carry; never materializes the (Lq, Lk) score matrix.
+
+    GQA is computed grouped — K/V are never repeated to the query head count
+    (§Perf H1: repetition multiplied K/V bytes by ``groups`` and forced SPMD
+    reshards).  Block masks are derived behind an ``optimization_barrier`` so
+    XLA cannot hoist them into O(nq·nk·qb·kb) buffers (§Perf H2); each step
+    recomputes a (qb, kb) predicate — trivial VPU work, no HBM traffic.
+
+    Complexity O(Lq·Lk·hd·h); peak memory O(qb·kb) per (b, h).
+    """
+    b, Lq, h, hd = q.shape
+    Lk, kv = k.shape[1], k.shape[2]
+    assert h == kv * groups, (h, kv, groups)
+    scale = 1.0 / math.sqrt(hd)
+
+    qb = min(q_block, Lq)
+    while Lq % qb:
+        qb //= 2
+    kb = min(k_block, Lk)
+    while Lk % kb:
+        kb //= 2
+    nq, nk = Lq // qb, Lk // kb
+
+    # (b, nq, qb, kv, g, hd) — group axis explicit, contraction stays on kv
+    q = q.reshape(b, nq, qb, kv, groups, hd)
+    k = k.reshape(b, nk, kb, kv, hd)
+    v = v.reshape(b, nk, kb, kv, hd)
+
+    q_pos_base = jnp.arange(qb, dtype=jnp.int32)
+    k_pos_base = jnp.arange(kb, dtype=jnp.int32)
+
+    def one_q_block(qi, q_blk):
+        # carries: m (max), l (denominator), acc (weighted sum) — f32
+        m0 = jnp.full((b, kv, groups, qb), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, kv, groups, qb), jnp.float32)
+        a0 = jnp.zeros((b, kv, groups, qb, hd), jnp.float32)
+
+        def kv_step(carry, inputs):
+            m, l, acc = carry
+            ki, k_blk, v_blk = inputs
+            s = jnp.einsum(
+                "bqcgd,bkcd->bcgqk", q_blk, k_blk,
+                preferred_element_type=jnp.float32,
+            ) * scale
+            if softcap is not None:
+                s = softcap * jnp.tanh(s / softcap)
+            # barrier: block indices are opaque to LICM → masks are computed
+            # per step as a (qb, kb) predicate, never hoisted/stacked (§Perf H2)
+            qi_b, ki_b = jax.lax.optimization_barrier((qi, ki))
+            qpos = q_offset + qi_b * qb + q_pos_base          # (qb,)
+            kpos = ki_b * kb + k_pos_base                     # (kb,)
+            mask = jnp.ones((qb, kb), dtype=bool)
+            if causal:
+                mask &= kpos[None, :] <= qpos[:, None]
+            if window is not None:
+                mask &= kpos[None, :] > qpos[:, None] - window
+            s = jnp.where(mask[None, None, None], s, -jnp.inf)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            # guard fully-masked rows (m_new = -inf): exp(-inf - -inf) -> use 0
+            safe_m = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(jnp.where(jnp.isfinite(s), s - safe_m[..., None], -jnp.inf))
+            alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - safe_m), 0.0)
+            l_new = alpha * l + p.sum(axis=-1)
+            acc_new = alpha[..., None] * acc + jnp.einsum(
+                "bcgqk,bkcd->bcgqd", p.astype(p_dtype), v_blk,
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l_new, acc_new), None
+
+        ks = jnp.arange(nk, dtype=jnp.int32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (ks, jnp.moveaxis(k, 1, 0), jnp.moveaxis(v, 1, 0))
+        )
+        out = acc / jnp.maximum(l[..., None], 1e-30)          # (b, kv, g, qb, hd)
+        return jnp.moveaxis(out, 3, 1)                        # (b, qb, kv, g, hd)
+
+    outs = jax.lax.map(
+        lambda args: one_q_block(*args),
+        (jnp.arange(nq, dtype=jnp.int32), jnp.moveaxis(q, 1, 0)),
+    )                                                         # (nq, b, qb, kv, g, hd)
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, Lq, h, hd)
+    return out
+
+
+def decode_attention(
+    q: jnp.ndarray,                # (b, 1, h, hd)   h = padded query heads
+    k_cache: jnp.ndarray,          # (b, S, kv, hd)  (ring-buffered slots)
+    v_cache: jnp.ndarray,
+    kpos: jnp.ndarray,             # (S,) int32 — absolute position per slot (-1 empty)
+    pos: jnp.ndarray,              # () int32 — index of the new token
+    *,
+    groups: int,
+    grouped: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    row_start: Optional[jnp.ndarray] = None,   # (b,) — continuous batching
+) -> jnp.ndarray:
+    """Single-step grouped attention against a (possibly ring-buffered) cache.
+
+    When the head plan is exact (``grouped``), K/V are never head-repeated
+    (§Perf H1 — repetition multiplied the cache read bytes by ``groups`` and
+    forced SPMD reshards against the sequence-sharded cache: 5–16× decode
+    wins).  Non-exact plans (internvl2) fall back to repetition.  The
+    slot-position array makes sliding-window ring buffers exact: masks use
+    absolute positions, so overwritten slots never leak.  ``row_start`` masks
+    positions before each row's current request — slot reuse for continuous
+    batching (serve/scheduler.py) never leaks a previous request's K/V."""
+    b, S, kv, hd = k_cache.shape
+    h = q.shape[2]
+    if not grouped:
+        k_cache = _repeat_kv(k_cache, groups)[:, :, :h]
+        v_cache = _repeat_kv(v_cache, groups)[:, :, :h]
+        kv = h
+        groups = 1
+    assert h == kv * groups, (h, kv, groups)
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(b, 1, kv, groups, hd)
+    s = jnp.einsum(
+        "bqcgd,bscd->bcgqs", qg, k_cache, preferred_element_type=jnp.float32
+    ) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    mask = (kpos >= 0) & (kpos <= pos)
+    if window is not None:
+        mask &= kpos > pos - window
+    mask = jnp.broadcast_to(mask[None, :], (b, S))
+    if row_start is not None:
+        mask &= kpos[None, :] >= row_start[:, None]
+    s = jnp.where(mask[:, None, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+    out = jnp.einsum(
+        "bcgqs,bscd->bqcgd", p, v_cache, preferred_element_type=jnp.float32
+    ).reshape(b, 1, h, hd)
+    return out.astype(q.dtype)
+
+
+# ----------------------------------------------------------------- MLP
+
+
+def swiglu(x: jnp.ndarray, w_gate, w_up, w_down) -> jnp.ndarray:
+    g = x @ w_gate
+    u = x @ w_up
+    return (jax.nn.silu(g) * u) @ w_down
+
+
+# ------------------------------------------------------- head accounting
+
+
+@dataclasses.dataclass(frozen=True)
+class HeadPlan:
+    """Padded head counts for exact tensor-parallel grouped GQA (DESIGN §6).
+
+    Invariant: ``pad_q == pad_kv * groups`` — attention is computed grouped
+    (K/V never repeated, §Perf H1), so padding must preserve the group shape.
+    Rule: smallest ``pad_kv ≥ n_kv`` with ``(pad_kv·groups) % tp == 0``,
+    accepted only if it wastes ≤ 2× query heads; otherwise no padding (heads
+    replicate across TP — exact, chosen only for small models like internvl2
+    where 7:1 grouping vs tp=16 would force 8× padding)."""
+
+    n_q: int          # real query heads
+    n_kv: int         # real kv heads
+    pad_q: int        # padded query heads
+    pad_kv: int       # padded kv heads (ceil(pad_q / groups))
+    groups: int       # q heads per kv head (unchanged by padding)
+    grouped: bool     # pad_q == pad_kv * groups → grouped decode is exact
+
+    @classmethod
+    def plan(cls, n_q: int, n_kv: int, tp: int) -> "HeadPlan":
+        groups = n_q // n_kv
+        assert n_q == n_kv * groups, "q heads must be a multiple of kv heads"
+        if tp <= 1 or n_q % tp == 0:
+            return cls(n_q, n_kv, n_q, n_kv, groups, True)
+        # 1) pad q heads to the TP multiple; exact grouping if it divides
+        a = ((n_q + tp - 1) // tp) * tp
+        kv_a = (a + groups - 1) // groups
+        if kv_a * groups == a:
+            return cls(n_q, n_kv, a, kv_a, groups, True)       # e.g. phi3 48/12
+        # 2) try a TP-multiple kv count within the 2× query-waste bound
+        b_kv = ((n_kv + tp - 1) // tp) * tp
+        if b_kv * groups <= 2 * n_q:
+            return cls(n_q, n_kv, b_kv * groups, b_kv, groups, True)  # llama4 80/16
+        # 3) non-exact repeat plan (decode repeats KV; e.g. internvl2 16/3)
+        return cls(n_q, n_kv, a, kv_a, groups, False)

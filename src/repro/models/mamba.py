@@ -1,0 +1,243 @@
+"""Mamba-2 (SSD — state-space duality) layer on the paper's chunked scan.
+
+The SSD recurrence per head is  ``s_t = a_t · s_{t-1} + dt_t · x_t ⊗ B_t``,
+``y_t = C_t · s_t + D · x_t`` — an *associative affine* recurrence, i.e. exactly
+the structure the paper parallelizes for FA runs.  The chunked algorithm here is
+the three-phase schema of ``core/scan.py`` (DESIGN §4):
+
+  reach  per chunk: the within-chunk quadratic form (decay-masked C·Bᵀ
+         "attention") plus the chunk's state contribution and total decay;
+  join   exclusive scan of (decay, state) pairs across chunks — implemented
+         with ``core.scan.exclusive_entries`` (single-device) or
+         ``sharded_exclusive_entries`` (context-parallel long sequences,
+         the same one-collective join the parser uses);
+  build  per chunk: add the inter-chunk contribution ``C_t · (decay · S_prev)``.
+
+Decode is the O(1) stepwise recurrence against an (heads, head_dim, d_state)
+state cache plus a (d_conv-1)-deep convolution cache.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.scan import exclusive_entries
+from .config import SSMConfig
+from .layers import ParamDecl, rms_norm
+
+
+def ssm_dims(d_model: int, cfg: SSMConfig) -> Dict[str, int]:
+    d_inner = cfg.expand * d_model
+    n_heads = d_inner // cfg.head_dim
+    conv_dim = d_inner + 2 * cfg.n_groups * cfg.d_state
+    return dict(d_inner=d_inner, n_heads=n_heads, conv_dim=conv_dim)
+
+
+def declare_ssm(d_model: int, cfg: SSMConfig) -> Dict[str, ParamDecl]:
+    dims = ssm_dims(d_model, cfg)
+    di, nh, cd = dims["d_inner"], dims["n_heads"], dims["conv_dim"]
+    in_dim = 2 * di + 2 * cfg.n_groups * cfg.d_state + nh
+    return {
+        # §Perf H5c: SSM projections are pure-TP (no FSDP on the contracting
+        # d_model dim) — FSDP there made the partitioner either all-reduce
+        # activation-sized partials (baseline) or replicate the batch (H5);
+        # replicating the modest weight shards over 'data' removes both.
+        "w_in": ParamDecl((d_model, in_dim), (None, "mlp"), init="scaled"),
+        "conv_w": ParamDecl((cfg.d_conv, cd), (None, "mlp"), init="scaled", scale=0.1),
+        "conv_b": ParamDecl((cd,), ("mlp",), init="zeros"),
+        "A_log": ParamDecl((nh,), ("heads",), init="ones"),
+        "D": ParamDecl((nh,), ("heads",), init="ones"),
+        "dt_bias": ParamDecl((nh,), ("heads",), init="zeros"),
+        "norm_w": ParamDecl((di,), ("mlp",), init="ones"),
+        "w_out": ParamDecl((di, d_model), ("mlp", None), init="scaled"),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv along seq via shifted adds (d_conv is tiny)."""
+    d_conv = w.shape[0]
+    out = x * w[-1]
+    for i in range(1, d_conv):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + shifted * w[-1 - i]
+    return out + b
+
+
+def _split_zxbcdt(zxbcdt, d_inner, g, n, nh):
+    z = zxbcdt[..., :d_inner]
+    xBC = zxbcdt[..., d_inner : 2 * d_inner + 2 * g * n]
+    dt = zxbcdt[..., 2 * d_inner + 2 * g * n :]
+    return z, xBC, dt
+
+
+def ssd_chunked(
+    xdt: jnp.ndarray,   # (b, l, nh, hp)  — dt-weighted inputs
+    dA: jnp.ndarray,    # (b, l, nh)      — negative decay log-increments dt·A
+    B: jnp.ndarray,     # (b, l, g, n)
+    C: jnp.ndarray,     # (b, l, g, n)
+    chunk: int,
+    initial_state: Optional[jnp.ndarray] = None,   # (b, nh, hp, n)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD: returns (y (b,l,nh,hp), final_state (b,nh,hp,n)).
+
+    Reach/join/build structure; memory peak is one chunk's (nh, q, q) decay
+    mask per batch — chunks are processed under ``lax.map``.
+    """
+    b, l, nh, hp = xdt.shape
+    g, n = B.shape[-2], B.shape[-1]
+    hpg = nh // g
+    q = min(chunk, l)
+    while l % q:
+        q //= 2
+    nc = l // q
+
+    xdt_c = xdt.reshape(b, nc, q, nh, hp)
+    dA_c = dA.reshape(b, nc, q, nh)
+    B_c = B.reshape(b, nc, q, g, n)
+    C_c = C.reshape(b, nc, q, g, n)
+
+    dA_cs = jnp.cumsum(dA_c, axis=2)                        # (b, nc, q, nh)
+    chunk_decay = jnp.exp(dA_cs[:, :, -1])                  # (b, nc, nh)
+
+    # ---- reach: per-chunk state contribution -----------------------------
+    # S_c = Σ_j exp(dA_cs[last] - dA_cs[j]) · B_j ⊗ xdt_j
+    w_state = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)          # (b, nc, q, nh)
+    Bh = jnp.repeat(B_c, hpg, axis=3)                       # (b, nc, q, nh=g*hpg, n)
+    S = jnp.einsum("bcqh,bcqhn,bcqhp->bchpn", w_state, Bh, xdt_c)
+
+    # ---- join: exclusive scan of (decay, state) across chunks ------------
+    def combine(later, earlier):
+        a2, s2 = later
+        a1, s1 = earlier
+        return a2 * a1, a2[..., None, None] * s1 + s2
+
+    def act(m, s):
+        a, inc = m
+        return a[..., None, None] * s + inc
+
+    init = (
+        jnp.zeros((b, nh, hp, n), jnp.float32)
+        if initial_state is None
+        else initial_state.astype(jnp.float32)
+    )
+    # stack chunk axis first for the scan
+    summaries = (
+        jnp.moveaxis(chunk_decay, 1, 0),                    # (nc, b, nh)
+        jnp.moveaxis(S, 1, 0),                              # (nc, b, nh, hp, n)
+    )
+    entries = exclusive_entries(combine, act, summaries, init)  # (nc, b, nh, hp, n)
+    final_state = act(jax.tree.map(lambda x: x[-1], summaries), entries[-1])
+
+    # ---- build: intra-chunk quadratic + inter-chunk contribution ---------
+    Ch = jnp.repeat(C_c, hpg, axis=3)                       # (b, nc, q, nh, n)
+
+    def one_chunk(args):
+        xdt_k, dA_cs_k, Bh_k, Ch_k, S_prev = args           # per-chunk slices
+        # intra: L[i,j] = exp(cs_i - cs_j) for i ≥ j
+        Lm = dA_cs_k[:, :, None, :] - dA_cs_k[:, None, :, :]     # (b, q, q, nh)
+        iota = jnp.arange(q)
+        causal = (iota[:, None] >= iota[None, :])[None, :, :, None]
+        Lmask = jnp.where(causal, jnp.exp(Lm), 0.0)
+        CB = jnp.einsum("bihn,bjhn->bijh", Ch_k, Bh_k)           # (b, q, q, nh)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", Lmask * CB, xdt_k)
+        # inter: C_i · (exp(cs_i) · S_prev)
+        w_in = jnp.exp(dA_cs_k)                                   # (b, q, nh)
+        y_inter = jnp.einsum("bihn,bih,bhpn->bihp", Ch_k, w_in, S_prev)
+        return y_intra + y_inter
+
+    ys = jax.lax.map(
+        one_chunk,
+        (
+            jnp.moveaxis(xdt_c, 1, 0),
+            jnp.moveaxis(dA_cs, 1, 0),
+            jnp.moveaxis(Bh, 1, 0),
+            jnp.moveaxis(Ch, 1, 0),
+            entries,
+        ),
+    )                                                        # (nc, b, q, nh, hp)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, l, nh, hp)
+    return y, final_state
+
+
+def ssm_forward(
+    params: Dict[str, jnp.ndarray],
+    x: jnp.ndarray,                    # (b, l, d)
+    cfg: SSMConfig,
+    rms_eps: float,
+    initial_state: Optional[jnp.ndarray] = None,
+    return_state: bool = False,
+    shard=lambda t, logical: t,
+):
+    """Full Mamba-2 block: in-proj → conv → SSD → gated norm → out-proj."""
+    b, l, d = x.shape
+    dims = ssm_dims(d, cfg)
+    di, nh = dims["d_inner"], dims["n_heads"]
+    g, n, hp = cfg.n_groups, cfg.d_state, cfg.head_dim
+
+    zxbcdt = shard(x @ params["w_in"], ("batch", "seq", "mlp"))
+    z, xBC, dt = _split_zxbcdt(zxbcdt, di, g, n, nh)
+    xBC = jax.nn.silu(_causal_conv(xBC, params["conv_w"], params["conv_b"]))
+    xs = xBC[..., :di].reshape(b, l, nh, hp)
+    B = xBC[..., di : di + g * n].reshape(b, l, g, n)
+    C = xBC[..., di + g * n :].reshape(b, l, g, n)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))        # (nh,) negative
+    dA = (dt * A).astype(jnp.float32)                         # (b, l, nh)
+    xdt = xs * dt.astype(xs.dtype)[..., None]
+
+    y, state = ssd_chunked(xdt, dA, B, C, cfg.chunk, initial_state)
+    y = y + params["D"][None, None, :, None] * xs
+    y = y.reshape(b, l, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm_w"], rms_eps)
+    out = shard(y @ params["w_out"], ("batch", "seq", None))
+    if return_state:
+        return out, state
+    return out
+
+
+def ssm_decode_step(
+    params: Dict[str, jnp.ndarray],
+    x: jnp.ndarray,                    # (b, 1, d)
+    cfg: SSMConfig,
+    rms_eps: float,
+    state: jnp.ndarray,                # (b, nh, hp, n)
+    conv_cache: jnp.ndarray,           # (b, d_conv-1, conv_dim)
+):
+    """O(1) single-token step.  Returns (out, new_state, new_conv_cache)."""
+    b, _, d = x.shape
+    dims = ssm_dims(d, cfg)
+    di, nh, cd = dims["d_inner"], dims["n_heads"], dims["conv_dim"]
+    g, n, hp = cfg.n_groups, cfg.d_state, cfg.head_dim
+
+    zxbcdt = x @ params["w_in"]
+    z, xBC, dt = _split_zxbcdt(zxbcdt, di, g, n, nh)
+    window = jnp.concatenate([conv_cache, xBC], axis=1)       # (b, d_conv, cd)
+    new_conv_cache = window[:, 1:]
+    conv_out = jnp.einsum("btc,tc->bc", window, params["conv_w"]) + params["conv_b"]
+    xBC1 = jax.nn.silu(conv_out)[:, None, :]
+
+    xs = xBC1[..., :di].reshape(b, nh, hp)
+    B = xBC1[..., di : di + g * n].reshape(b, g, n)
+    C = xBC1[..., di + g * n :].reshape(b, g, n)
+    hpg = nh // g
+    Bh = jnp.repeat(B, hpg, axis=1)                           # (b, nh, n)
+    Ch = jnp.repeat(C, hpg, axis=1)
+
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])  # (b, nh)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt * A)                                       # (b, nh)
+    xdt = xs * dt.astype(xs.dtype)[..., None]                 # (b, nh, hp)
+
+    new_state = (
+        a[..., None, None] * state
+        + jnp.einsum("bhp,bhn->bhpn", xdt, Bh).astype(jnp.float32)
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Ch) + params["D"][None, :, None] * xs
+    y = y.reshape(b, 1, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm_w"], rms_eps)
+    return y @ params["w_out"], new_state, new_conv_cache

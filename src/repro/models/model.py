@@ -1,0 +1,591 @@
+"""The decoder LM backbone covering all ten assigned architectures.
+
+Structure (DESIGN §3/§6):
+  * params are declared (shape + logical sharding axes + init) per layer kind,
+    then *stacked* along a leading layer axis so the forward pass scans over
+    layers (``lax.scan``) — one traced layer per kind, which keeps XLA compile
+    times flat in depth (essential for the 40–64-layer dry-run matrix);
+  * hybrid layouts (zamba2) run homogeneous SSM runs under scan with a single
+    weight-shared attention block applied between runs;
+  * three entry points: ``forward_train`` (causal LM loss, microbatched by the
+    caller), ``prefill`` (builds decode caches), ``decode_step`` (one token);
+  * attention decode caches are ring-buffered at ``min(seq, window)`` slots for
+    sliding-window archs; full-attention caches are sequence-sharded over the
+    'model' axis so 32k-token decode fits HBM (flash-decoding executed by the
+    SPMD partitioner — the paper's split/reach/join pattern applied to
+    softmax attention; DESIGN §2).
+  * modality frontends (internvl2 vision, musicgen audio) are STUBS per the
+    assignment: ``input_specs`` supplies precomputed patch/frame embeddings
+    which are projected and prepended to the token sequence.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig, ShapeSpec
+from .layers import (
+    HeadPlan,
+    ParamDecl,
+    apply_rope,
+    blockwise_attention,
+    decode_attention,
+    rms_norm,
+    swiglu,
+    tree_abstract,
+    tree_init,
+    tree_logical,
+)
+from .mamba import declare_ssm, ssm_decode_step, ssm_dims, ssm_forward
+from .moe import declare_moe, moe_ffn
+
+Params = Dict[str, Any]
+
+
+# ===================================================================== decls
+
+
+def _attn_decls(cfg: ModelConfig, plan: HeadPlan, heads_prefix: str = "") -> Dict[str, ParamDecl]:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    return {
+        "norm1": ParamDecl((d,), (None,), init="ones"),
+        "wq": ParamDecl((d, plan.pad_q, hd), ("fsdp", "heads", None), init="scaled"),
+        "wk": ParamDecl((d, plan.pad_kv, hd), ("fsdp", "kv_heads", None), init="scaled"),
+        "wv": ParamDecl((d, plan.pad_kv, hd), ("fsdp", "kv_heads", None), init="scaled"),
+        "wo": ParamDecl((plan.pad_q, hd, d), ("heads", None, "fsdp"), init="scaled"),
+    }
+
+
+def _mlp_decls(cfg: ModelConfig) -> Dict[str, ParamDecl]:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "norm2": ParamDecl((d,), (None,), init="ones"),
+        "w_gate": ParamDecl((d, f), ("fsdp", "mlp"), init="scaled"),
+        "w_up": ParamDecl((d, f), ("fsdp", "mlp"), init="scaled"),
+        "w_down": ParamDecl((f, d), ("mlp", "fsdp"), init="scaled"),
+    }
+
+
+def _layer_decls(cfg: ModelConfig, kind: str, plan: HeadPlan) -> Dict[str, ParamDecl]:
+    if kind == "attn":
+        return {**_attn_decls(cfg, plan), **_mlp_decls(cfg)}
+    if kind == "moe":
+        return {
+            **_attn_decls(cfg, plan),
+            "norm2": ParamDecl((cfg.d_model,), (None,), init="ones"),
+            "moe": declare_moe(cfg.d_model, cfg.moe),
+        }
+    if kind == "ssm":
+        return {
+            "norm1": ParamDecl((cfg.d_model,), (None,), init="ones"),
+            "ssm": declare_ssm(cfg.d_model, cfg.ssm),
+        }
+    raise ValueError(kind)
+
+
+def _stack_decls(decls: Dict[str, Any], n: int) -> Dict[str, Any]:
+    """Prepend a layer axis of size n to every decl (scan-over-layers)."""
+    return jax.tree.map(
+        lambda d: ParamDecl((n,) + d.shape, ("stack",) + d.logical, d.init, d.scale),
+        decls,
+        is_leaf=lambda x: isinstance(x, ParamDecl),
+    )
+
+
+def head_plan(cfg: ModelConfig, tp: int) -> HeadPlan:
+    return HeadPlan.plan(cfg.n_heads, cfg.n_kv_heads, tp)
+
+
+def shared_attn_plan(cfg: ModelConfig, tp: int) -> HeadPlan:
+    h = cfg.shared_attn_heads or cfg.n_heads
+    return HeadPlan.plan(h, h, tp)  # shared block is MHA (zamba2)
+
+
+def declare_params(cfg: ModelConfig, tp: int = 1) -> Dict[str, Any]:
+    d = cfg.d_model
+    plan = head_plan(cfg, tp)
+    kinds = cfg.layer_kinds
+    decls: Dict[str, Any] = {
+        "embed": ParamDecl((cfg.vocab_size, d), ("vocab", None), init="normal"),
+        "final_norm": ParamDecl((d,), (None,), init="ones"),
+    }
+    if not cfg.tie_embeddings:
+        decls["lm_head"] = ParamDecl((d, cfg.vocab_size), (None, "vocab"), init="scaled")
+    if cfg.frontend is not None:
+        decls["frontend_proj"] = ParamDecl(
+            (cfg.frontend.feature_dim, d), (None, None), init="scaled"
+        )
+    stacks: Dict[str, Any] = {}
+    for kind in sorted(set(kinds)):
+        n = sum(1 for k in kinds if k == kind)
+        stacks[kind] = _stack_decls(_layer_decls(cfg, kind, plan), n)
+    decls["stacks"] = stacks
+    if cfg.shared_attn_every:
+        decls["shared_attn"] = {
+            **_attn_decls(cfg, shared_attn_plan(cfg, tp)),
+            **_mlp_decls(cfg),
+        }
+    return decls
+
+
+def init_params(cfg: ModelConfig, key, tp: int = 1) -> Params:
+    return tree_init(declare_params(cfg, tp), key, jnp.dtype(cfg.param_dtype))
+
+
+def abstract_params(cfg: ModelConfig, tp: int = 1) -> Params:
+    return tree_abstract(declare_params(cfg, tp), jnp.dtype(cfg.param_dtype))
+
+
+def param_logical_axes(cfg: ModelConfig, tp: int = 1) -> Params:
+    return tree_logical(declare_params(cfg, tp))
+
+
+# ================================================================ layer fwd
+
+
+def _attention(
+    p: Params,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    plan: HeadPlan,
+    positions: jnp.ndarray,
+    window: Optional[int],
+    shard: Callable,
+) -> jnp.ndarray:
+    b, l, d = x.shape
+    hd = cfg.resolved_head_dim
+    # FSDP gather-at-use (§Perf H5): constrain weights to TP-only sharding at
+    # the matmul site so SPMD all-gathers the (small) weight shard rather than
+    # partially contracting and all-reducing the (huge) activation.
+    wq = shard(p["wq"], (None, "heads", None))
+    wk = shard(p["wk"], (None, "kv_heads", None))
+    wv = shard(p["wv"], (None, "kv_heads", None))
+    wo = shard(p["wo"], ("heads", None, None))
+    q = jnp.einsum("bld,dhk->blhk", x, wq)
+    k = jnp.einsum("bld,dhk->blhk", x, wk)
+    v = jnp.einsum("bld,dhk->blhk", x, wv)
+    q = shard(q, ("batch", "seq", "heads", None))
+    k = shard(k, ("batch", "seq", "kv_heads", None))
+    v = shard(v, ("batch", "seq", "kv_heads", None))
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    # Train/prefill: REPEAT layout — measured better than grouped einsums here
+    # (the 6D grouped form breaks SPMD head-sharding propagation for splits
+    # like phi3's (12,4): −2.3×; see §Perf H8).  The repeated K/V stay
+    # head-sharded exactly like the baseline; mask-barrier + bf16-p retained.
+    kr = shard(jnp.repeat(k, plan.groups, axis=2)[:, :, : plan.pad_q],
+               ("batch", "seq", "heads", None))
+    vr = shard(jnp.repeat(v, plan.groups, axis=2)[:, :, : plan.pad_q],
+               ("batch", "seq", "heads", None))
+    o = blockwise_attention(
+        q, kr, vr, groups=1, causal=True, window=window,
+        softcap=cfg.attn_logit_softcap, p_dtype=jnp.dtype(cfg.attn_p_dtype),
+    )
+    o = shard(o, ("batch", "seq", "heads", None))
+    return jnp.einsum("blhk,hkd->bld", o.astype(x.dtype), wo)
+
+
+def _attn_block(p, x, cfg, plan, positions, window, shard):
+    h = x + _attention(
+        p, rms_norm(x, p["norm1"], cfg.rms_eps), cfg, plan, positions, window, shard
+    )
+    if "w_gate" in p:  # dense MLP (weights FSDP-gathered at use, §Perf H5)
+        h = h + swiglu(
+            rms_norm(h, p["norm2"], cfg.rms_eps),
+            shard(p["w_gate"], (None, "mlp")),
+            shard(p["w_up"], (None, "mlp")),
+            shard(p["w_down"], ("mlp", None)),
+        )
+    return h
+
+
+def _moe_block(p, x, cfg, plan, positions, window, shard):
+    h = x + _attention(p, rms_norm(x, p["norm1"], cfg.rms_eps), cfg, plan, positions, window, shard)
+    b, l, d = h.shape
+    flat = rms_norm(h, p["norm2"], cfg.rms_eps).reshape(b * l, d)
+    y, aux = moe_ffn(p["moe"], flat, cfg.moe, constrain=shard)
+    return h + y.reshape(b, l, d), aux
+
+
+def _ssm_block(p, x, cfg, shard):
+    return x + ssm_forward(
+        p["ssm"], rms_norm(x, p["norm1"], cfg.rms_eps), cfg.ssm, cfg.rms_eps,
+        shard=shard,
+    )
+
+
+# ============================================================== full forward
+
+
+def _scan_stack(body: Callable, x, stack: Params, remat: bool):
+    fn = jax.checkpoint(body) if remat else body
+
+    def step(carry, layer_params):
+        h, aux = carry
+        out = fn(layer_params, h)
+        if isinstance(out, tuple):
+            h2, a = out
+            aux = jax.tree.map(lambda s, v: s + v, aux, a)
+            return (h2, aux), None
+        return (out, aux), None
+
+    zero_aux = {"moe_lb_loss": jnp.zeros((), jnp.float32),
+                "moe_z_loss": jnp.zeros((), jnp.float32)}
+    (x, aux), _ = jax.lax.scan(step, (x, zero_aux), stack)
+    return x, aux
+
+
+def _layer_runs(cfg: ModelConfig):
+    """Consecutive same-kind runs: [(kind, start_idx_in_stack, count), ...]."""
+    kinds = cfg.layer_kinds
+    runs = []
+    seen: Dict[str, int] = {}
+    i = 0
+    while i < len(kinds):
+        j = i
+        while j < len(kinds) and kinds[j] == kinds[i]:
+            j += 1
+        k = kinds[i]
+        runs.append((k, seen.get(k, 0), j - i))
+        seen[k] = seen.get(k, 0) + (j - i)
+        i = j
+    return runs
+
+
+def backbone(
+    params: Params,
+    x: jnp.ndarray,                  # (b, L, d) embedded inputs
+    cfg: ModelConfig,
+    positions: jnp.ndarray,          # (b, L)
+    tp: int,
+    shard: Callable,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    plan = head_plan(cfg, tp)
+    aux_total = {"moe_lb_loss": jnp.zeros((), jnp.float32),
+                 "moe_z_loss": jnp.zeros((), jnp.float32)}
+
+    def body_for(kind):
+        if kind == "attn":
+            return lambda p, h: _attn_block(p, h, cfg, plan, positions, cfg.sliding_window, shard)
+        if kind == "moe":
+            return lambda p, h: _moe_block(p, h, cfg, plan, positions, cfg.sliding_window, shard)
+        if kind == "ssm":
+            return lambda p, h: _ssm_block(p, h, cfg, shard)
+        raise ValueError(kind)
+
+    runs = _layer_runs(cfg)
+    shared_every = cfg.shared_attn_every
+    layers_done = 0
+    for kind, start, count in runs:
+        stack = jax.tree.map(lambda t: t[start : start + count], params["stacks"][kind])
+        if shared_every:
+            # interleave the weight-shared attention block every `shared_every`
+            done_in_run = 0
+            while done_in_run < count:
+                step_n = min(shared_every - (layers_done % shared_every) or shared_every,
+                             count - done_in_run)
+                sub = jax.tree.map(
+                    lambda t: t[done_in_run : done_in_run + step_n], stack
+                )
+                x, aux = _scan_stack(body_for(kind), x, sub, cfg.remat)
+                aux_total = jax.tree.map(lambda s, v: s + v, aux_total, aux)
+                done_in_run += step_n
+                layers_done += step_n
+                if layers_done % shared_every == 0:
+                    splan = shared_attn_plan(cfg, tp)
+                    x = _attn_block(
+                        params["shared_attn"], x, cfg, splan, positions, None, shard
+                    )
+        else:
+            x, aux = _scan_stack(body_for(kind), x, stack, cfg.remat)
+            aux_total = jax.tree.map(lambda s, v: s + v, aux_total, aux)
+            layers_done += count
+        x = shard(x, ("batch", "seq", None))
+    return x, aux_total
+
+
+def embed_inputs(
+    params: Params,
+    tokens: jnp.ndarray,                       # (b, L)
+    cfg: ModelConfig,
+    extra: Optional[jnp.ndarray] = None,       # (b, n_extra, feat) frontend stub
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (x (b, L_total, d), positions (b, L_total))."""
+    emb = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    if cfg.frontend is not None and extra is not None:
+        fe = (extra.astype(jnp.dtype(cfg.dtype)) @ params["frontend_proj"]).astype(
+            jnp.dtype(cfg.dtype)
+        )
+        emb = jnp.concatenate([fe, emb], axis=1)
+    b, L = emb.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32), (b, L))
+    return emb, positions
+
+
+def logits_from(params: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return jnp.einsum("bld,dv->blv", x, head)
+
+
+def lm_loss(
+    logits: jnp.ndarray,            # (b, L, V)
+    labels: jnp.ndarray,            # (b, L) next-token targets; -1 = ignore
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    lf = logits.astype(jnp.float32)
+    m = jnp.max(lf, axis=-1, keepdims=True)
+    lse = jnp.log(jnp.sum(jnp.exp(lf - m), axis=-1)) + m[..., 0]
+    safe_labels = jnp.maximum(labels, 0)
+    gold = jnp.take_along_axis(lf, safe_labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(mask.sum(), 1.0), mask.sum()
+
+
+def forward_train(
+    params: Params,
+    batch: Dict[str, jnp.ndarray],
+    cfg: ModelConfig,
+    tp: int = 1,
+    shard: Callable = lambda t, logical: t,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    tokens = batch["tokens"]
+    extra = batch.get("extra")
+    x, positions = embed_inputs(params, tokens, cfg, extra)
+    x = shard(x, ("batch", "seq", None))
+    x, aux = backbone(params, x, cfg, positions, tp, shard)
+    n_extra = 0 if extra is None else extra.shape[1]
+    x_text = x[:, n_extra:]
+    logits = logits_from(params, x_text, cfg)
+    logits = shard(logits, ("batch", "seq", "vocab"))
+    labels = jnp.concatenate(
+        [tokens[:, 1:], jnp.full_like(tokens[:, :1], -1)], axis=1
+    )
+    loss, n_tok = lm_loss(logits, labels)
+    total = loss + aux["moe_lb_loss"] + aux["moe_z_loss"]
+    return total, {"loss": loss, "n_tokens": n_tok, **aux}
+
+
+# ==================================================================== decode
+
+
+@dataclasses.dataclass
+class CacheSpec:
+    """Static description of the decode cache for one config/shape."""
+
+    cache_len: int                   # attention slots (min(seq, window))
+    full_len: int                    # logical sequence length
+
+
+def make_cache(cfg: ModelConfig, batch: int, seq_len: int, tp: int = 1) -> Dict[str, Any]:
+    """Zero-initialized decode caches (used by prefill and by input_specs)."""
+    dt = jnp.dtype(cfg.dtype)
+    plan = head_plan(cfg, tp)
+    hd = cfg.resolved_head_dim
+    cache_len = min(seq_len, cfg.sliding_window) if cfg.sliding_window else seq_len
+    kinds = cfg.layer_kinds
+    caches: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+    n_attn = sum(1 for k in kinds if k in ("attn", "moe"))
+    if n_attn or cfg.shared_attn_every:
+        caches["row_start"] = jnp.zeros((batch,), jnp.int32)
+    if n_attn:
+        caches["attn"] = {
+            "k": jnp.zeros((n_attn, batch, cache_len, plan.pad_kv, hd), dt),
+            "v": jnp.zeros((n_attn, batch, cache_len, plan.pad_kv, hd), dt),
+            "slot_pos": jnp.full((cache_len,), -1, jnp.int32),
+        }
+    n_ssm = sum(1 for k in kinds if k == "ssm")
+    if n_ssm:
+        dims = ssm_dims(cfg.d_model, cfg.ssm)
+        caches["ssm"] = {
+            "state": jnp.zeros(
+                (n_ssm, batch, dims["n_heads"], cfg.ssm.head_dim, cfg.ssm.d_state),
+                jnp.float32,
+            ),
+            "conv": jnp.zeros((n_ssm, batch, cfg.ssm.d_conv - 1, dims["conv_dim"]), dt),
+        }
+    if cfg.shared_attn_every:
+        splan = shared_attn_plan(cfg, tp)
+        n_shared = len(kinds) // cfg.shared_attn_every
+        caches["shared_attn"] = {
+            "k": jnp.zeros((n_shared, batch, cache_len, splan.pad_kv, hd), dt),
+            "v": jnp.zeros((n_shared, batch, cache_len, splan.pad_kv, hd), dt),
+        }
+    return caches
+
+
+def _decode_attn_block(p, x, cfg, plan, cache_k, cache_v, slot_pos, pos, window, shard,
+                       row_start=None):
+    """One attention (or attn+mlp / attn+moe) decode step against the cache."""
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim
+    xn = rms_norm(x, p["norm1"], cfg.rms_eps)
+    q = jnp.einsum("bld,dhk->blhk", xn, p["wq"])
+    k = jnp.einsum("bld,dhk->blhk", xn, p["wk"])
+    v = jnp.einsum("bld,dhk->blhk", xn, p["wv"])
+    posb = jnp.broadcast_to(pos[None], (b, 1))
+    q = apply_rope(q, posb, cfg.rope_theta)
+    k = apply_rope(k, posb, cfg.rope_theta)
+    cache_len = cache_k.shape[1]
+    slot = pos % cache_len
+    new_k = jax.lax.dynamic_update_slice(cache_k, k, (0, slot, 0, 0))
+    new_v = jax.lax.dynamic_update_slice(cache_v, v, (0, slot, 0, 0))
+    new_k = shard(new_k, ("batch", "cache_seq", "kv_heads", None))
+    new_v = shard(new_v, ("batch", "cache_seq", "kv_heads", None))
+    kpos = slot_pos  # absolute positions per slot (updated by caller)
+    o = decode_attention(
+        q, new_k, new_v, kpos, pos,
+        groups=plan.groups, grouped=plan.grouped,
+        window=window, softcap=cfg.attn_logit_softcap, row_start=row_start,
+    )
+    h = x + jnp.einsum("blhk,hkd->bld", o.astype(x.dtype), p["wo"])
+    if "w_gate" in p:
+        h = h + swiglu(rms_norm(h, p["norm2"], cfg.rms_eps), p["w_gate"], p["w_up"], p["w_down"])
+    elif "moe" in p:
+        b2, l2, d2 = h.shape
+        flat = rms_norm(h, p["norm2"], cfg.rms_eps).reshape(b2 * l2, d2)
+        y, _ = moe_ffn(p["moe"], flat, cfg.moe, constrain=lambda t, a: t)
+        h = h + y.reshape(b2, l2, d2)
+    return h, new_k, new_v
+
+
+def decode_step(
+    params: Params,
+    caches: Dict[str, Any],
+    token: jnp.ndarray,             # (b, 1) int32
+    cfg: ModelConfig,
+    tp: int = 1,
+    shard: Callable = lambda t, logical: t,
+) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """One serving step: next-token logits + updated caches."""
+    pos = caches["pos"]
+    plan = head_plan(cfg, tp)
+    x = jnp.take(params["embed"], token, axis=0).astype(jnp.dtype(cfg.dtype))
+    new_caches = dict(caches)
+
+    if "attn" in caches:
+        cache_len = caches["attn"]["k"].shape[2]
+        slot = pos % cache_len
+        new_caches["attn"] = dict(caches["attn"])
+        new_caches["attn"]["slot_pos"] = caches["attn"]["slot_pos"].at[slot].set(pos)
+    kinds = cfg.layer_kinds
+    runs = _layer_runs(cfg)
+    shared_every = cfg.shared_attn_every
+    layers_done = 0
+    attn_used = 0
+    ssm_used = 0
+    shared_used = 0
+
+    row_start = caches.get("row_start")
+
+    def attn_body(p, h, ck, cv):
+        return _decode_attn_block(
+            p, h, cfg, plan, ck, cv,
+            new_caches["attn"]["slot_pos"], pos, cfg.sliding_window, shard,
+            row_start=row_start,
+        )
+
+    def ssm_body(p, h, state, conv):
+        y, ns, nc = ssm_decode_step(
+            p["ssm"], rms_norm(h, p["norm1"], cfg.rms_eps), cfg.ssm, cfg.rms_eps,
+            state, conv,
+        )
+        return h + y, ns, nc
+
+    for kind, start, count in runs:
+        stack = jax.tree.map(lambda t: t[start : start + count], params["stacks"][kind])
+        sub_ranges = [(0, count)]
+        if shared_every:
+            sub_ranges = []
+            done = 0
+            while done < count:
+                step_n = min(shared_every - (layers_done + done) % shared_every or shared_every,
+                             count - done)
+                sub_ranges.append((done, step_n))
+                done += step_n
+        for (off, cnt) in sub_ranges:
+            sub = jax.tree.map(lambda t: t[off : off + cnt], stack)
+            if kind in ("attn", "moe"):
+                ck = jax.lax.dynamic_slice_in_dim(caches["attn"]["k"], attn_used, cnt, 0)
+                cv = jax.lax.dynamic_slice_in_dim(caches["attn"]["v"], attn_used, cnt, 0)
+
+                def step(h, xs):
+                    p, k_, v_ = xs
+                    h2, nk, nv = attn_body(p, h, k_, v_)
+                    return h2, (nk, nv)
+
+                x, (nk, nv) = jax.lax.scan(step, x, (sub, ck, cv))
+                new_caches["attn"]["k"] = jax.lax.dynamic_update_slice_in_dim(
+                    new_caches["attn"]["k"], nk, attn_used, 0
+                )
+                new_caches["attn"]["v"] = jax.lax.dynamic_update_slice_in_dim(
+                    new_caches["attn"]["v"], nv, attn_used, 0
+                )
+                attn_used += cnt
+            else:  # ssm
+                st = jax.lax.dynamic_slice_in_dim(caches["ssm"]["state"], ssm_used, cnt, 0)
+                cc = jax.lax.dynamic_slice_in_dim(caches["ssm"]["conv"], ssm_used, cnt, 0)
+
+                def sstep(h, xs):
+                    p, s_, c_ = xs
+                    h2, ns, nc = ssm_body(p, h, s_, c_)
+                    return h2, (ns, nc)
+
+                x, (ns, nc) = jax.lax.scan(sstep, x, (sub, st, cc))
+                new_caches.setdefault("ssm", dict(caches["ssm"]))
+                new_caches["ssm"] = dict(new_caches["ssm"])
+                new_caches["ssm"]["state"] = jax.lax.dynamic_update_slice_in_dim(
+                    new_caches["ssm"]["state"], ns, ssm_used, 0
+                )
+                new_caches["ssm"]["conv"] = jax.lax.dynamic_update_slice_in_dim(
+                    new_caches["ssm"]["conv"], nc, ssm_used, 0
+                )
+                ssm_used += cnt
+            layers_done += cnt
+            if shared_every and layers_done % shared_every == 0 and layers_done <= len(kinds):
+                splan = shared_attn_plan(cfg, tp)
+                sk = caches["shared_attn"]["k"][shared_used]
+                sv = caches["shared_attn"]["v"][shared_used]
+                x, nk, nv = _decode_attn_block(
+                    params["shared_attn"], x, cfg, splan, sk, sv,
+                    new_caches["attn"]["slot_pos"] if "attn" in new_caches
+                    else jnp.arange(sk.shape[1], dtype=jnp.int32),
+                    pos, None, shard, row_start=row_start,
+                )
+                new_caches.setdefault("shared_attn", dict(caches["shared_attn"]))
+                new_caches["shared_attn"] = dict(new_caches["shared_attn"])
+                new_caches["shared_attn"]["k"] = new_caches["shared_attn"]["k"].at[shared_used].set(nk)
+                new_caches["shared_attn"]["v"] = new_caches["shared_attn"]["v"].at[shared_used].set(nv)
+                shared_used += 1
+
+    logits = logits_from(params, x, cfg)
+    new_caches["pos"] = pos + 1
+    return logits, new_caches
+
+
+def prefill(
+    params: Params,
+    tokens: jnp.ndarray,            # (b, L)
+    cfg: ModelConfig,
+    tp: int = 1,
+    shard: Callable = lambda t, logical: t,
+    extra: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """Full-sequence forward producing last-position logits.
+
+    (Cache *population* during prefill is exercised in the serving loop via
+    step-wise decode; the dry-run prefill cell lowers this full forward, which
+    is the compute-bound phase of serving.)
+    """
+    x, positions = embed_inputs(params, tokens, cfg, extra)
+    x = shard(x, ("batch", "seq", None))
+    x, _ = backbone(params, x, cfg, positions, tp, shard)
+    logits = logits_from(params, x[:, -1:], cfg)
+    return logits, {"pos": jnp.asarray(x.shape[1], jnp.int32)}

@@ -1,0 +1,120 @@
+"""AdamW with fp32 master weights, cosine schedule, global-norm clipping.
+
+Mixed-precision discipline (DESIGN §6):
+  * live params are bf16 (matmul inputs);
+  * the optimizer state holds an fp32 master copy plus fp32 (m, v);
+  * gradients arrive bf16 (the "gradient compression" reduction dtype — DP
+    all-reduces move half the bytes), are accumulated/updated in fp32;
+  * optimizer state shards exactly like the parameters (FSDP rules make this
+    ZeRO-3; with pure DP the ``fsdp`` logical axis still shards the state —
+    ZeRO-1 — because the state decls reuse the parameter logical axes).
+
+Pure-pytree implementation (no optax dependency).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr_peak: float = 3e-4
+    lr_min: float = 3e-5
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray          # () int32
+    master: Any                # fp32 copy of params
+    m: Any
+    v: Any
+
+
+def lr_at(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear warmup → cosine decay to lr_min."""
+    step_f = step.astype(jnp.float32)
+    warm = cfg.lr_peak * step_f / max(cfg.warmup_steps, 1)
+    prog = jnp.clip(
+        (step_f - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0
+    )
+    cos = cfg.lr_min + 0.5 * (cfg.lr_peak - cfg.lr_min) * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step_f < cfg.warmup_steps, warm, cos)
+
+
+def init_opt_state(params: Any) -> OptState:
+    f32 = lambda p: p.astype(jnp.float32)
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return OptState(
+        step=jnp.zeros((), jnp.int32),
+        master=jax.tree.map(f32, params),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+    )
+
+
+def abstract_opt_state(abstract_params: Any) -> OptState:
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    return OptState(
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        master=jax.tree.map(f32, abstract_params),
+        m=jax.tree.map(f32, abstract_params),
+        v=jax.tree.map(f32, abstract_params),
+    )
+
+
+def global_norm(grads: Any) -> jnp.ndarray:
+    leaves = jax.tree.leaves(grads)
+    return jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in leaves))
+
+
+def _decay_mask(path: Tuple, leaf) -> bool:
+    """No weight decay on norms / biases / scalars (1-D leaves)."""
+    return leaf.ndim >= 2
+
+
+def apply_updates(
+    cfg: AdamWConfig,
+    params: Any,
+    grads: Any,
+    state: OptState,
+    param_dtype=jnp.bfloat16,
+) -> Tuple[Any, OptState, Dict[str, jnp.ndarray]]:
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+    step = state.step + 1
+    lr = lr_at(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, master):
+        g = g.astype(jnp.float32) * scale
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * g * g
+        mh = m2 / bc1
+        vh = v2 / bc2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if master.ndim >= 2:
+            delta = delta + cfg.weight_decay * master
+        new_master = master - lr * delta
+        return m2, v2, new_master
+
+    out = jax.tree.map(upd, grads, state.m, state.v, state.master)
+    m2 = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    v2 = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    master2 = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_params = jax.tree.map(lambda mp: mp.astype(param_dtype), master2)
+    new_state = OptState(step=step, master=master2, m=m2, v=v2)
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

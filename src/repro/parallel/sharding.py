@@ -1,0 +1,145 @@
+"""Logical-axis sharding rules (DP / FSDP / TP / EP / SP) over the production mesh.
+
+Every parameter and activation in the model stack is annotated with *logical*
+axis names; ``MeshRules`` maps them to physical mesh axes.  The production mesh
+is ``('data', 'model')`` single-pod and ``('pod', 'data', 'model')`` multi-pod
+(``launch/mesh.py``); the rules below scale to any pod count because the
+``pod`` axis only ever carries batch (pure DP) and the parser's chunk axis.
+
+Default mapping (MaxText-style fsdp+tp):
+  batch   → ('pod', 'data')     data parallel over pods × data
+  fsdp    → 'data'              parameter/optimizer sharding (ZeRO-3 style)
+  heads   → 'model'             tensor parallel attention
+  kv_heads→ 'model' when divisible, else replicated (GQA, exact)
+  mlp     → 'model'             tensor parallel FFN
+  vocab   → 'model'             tensor parallel embedding / logits
+  experts → 'model' when E % TP == 0 (expert parallel), else replicated
+            (expert-FFN hidden dim then carries 'model' instead)
+  seq     → None (replicated); 'chunk' → ('pod','data') for the parser/SSM
+            context-parallel long-sequence path.
+
+A logical axis resolving to a mesh axis already used by another dim of the same
+tensor is dropped (replicated) — PartitionSpec axes must be disjoint.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+Axis = Union[None, str, Tuple[str, ...]]
+
+
+@dataclass(frozen=True)
+class MeshRules:
+    """Logical-axis → mesh-axis mapping."""
+
+    rules: Dict[str, Axis] = field(
+        default_factory=lambda: {
+            "batch": ("pod", "data"),
+            "fsdp": "data",
+            "heads": "model",
+            "kv_heads": "model",
+            "mlp": "model",
+            "vocab": "model",
+            "experts": "model",
+            "expert_mlp": "model",
+            "d_state": None,
+            "embed": None,
+            "seq": None,
+            "cache_seq": "model",  # decode-cache slots: flash-decode sharding
+            "chunk": ("pod", "data"),
+            "stack": None,  # scan-over-layers leading dim
+        }
+    )
+
+    def resolve(self, logical: Sequence[Axis], mesh: Optional[Mesh] = None) -> PartitionSpec:
+        """Map per-dim logical names to a PartitionSpec, dropping mesh axes that
+        are absent from ``mesh`` or already used by an earlier dim."""
+        used: set = set()
+        out = []
+        avail = set(mesh.axis_names) if mesh is not None else None
+        for name in logical:
+            ax = self.rules.get(name, None) if isinstance(name, str) else name
+            if ax is None:
+                out.append(None)
+                continue
+            axes = (ax,) if isinstance(ax, str) else tuple(ax)
+            axes = tuple(
+                a for a in axes
+                if a not in used and (avail is None or a in avail)
+            )
+            used.update(axes)
+            out.append(axes if len(axes) > 1 else (axes[0] if axes else None))
+        while out and out[-1] is None:
+            out.pop()
+        return PartitionSpec(*out)
+
+    def with_overrides(self, **kw: Axis) -> "MeshRules":
+        d = dict(self.rules)
+        d.update(kw)
+        return MeshRules(rules=d)
+
+
+def logical_sharding(
+    mesh: Mesh, rules: MeshRules, logical: Sequence[Axis]
+) -> NamedSharding:
+    return NamedSharding(mesh, rules.resolve(logical, mesh))
+
+
+def constrain(x, mesh: Mesh, rules: MeshRules, logical: Sequence[Axis]):
+    """with_sharding_constraint by logical axes (no-op outside jit)."""
+    return jax.lax.with_sharding_constraint(x, logical_sharding(mesh, rules, logical))
+
+
+def divisible(n: int, mesh: Mesh, axis: Axis) -> bool:
+    """Is dimension n divisible by the product of the given mesh axes?"""
+    if axis is None:
+        return True
+    axes = (axis,) if isinstance(axis, str) else tuple(axis)
+    size = 1
+    for a in axes:
+        if a in mesh.axis_names:
+            size *= mesh.shape[a]
+    return n % size == 0
+
+
+def adapt_rules_for(cfg, mesh: Mesh, rules: MeshRules) -> MeshRules:
+    """Drop shardings that do not divide this model's dimensions (GQA kv heads,
+    expert counts, vocab remainders) — replication is the exact fallback.
+
+    Head counts are checked AFTER zero-padding (HeadPlan): query heads pad to
+    the TP multiple, so 'heads' stays sharded for e.g. 14→16 or 40→48."""
+    from ..models.layers import HeadPlan  # local import to avoid cycles
+
+    overrides: Dict[str, Axis] = {}
+    tp = mesh.shape.get("model", 1)
+    plan = HeadPlan.plan(cfg.n_heads, cfg.n_kv_heads, tp)
+    if not divisible(plan.pad_kv, mesh, rules.rules.get("kv_heads")):
+        overrides["kv_heads"] = None
+    if not divisible(plan.pad_q, mesh, rules.rules.get("heads")):
+        overrides["heads"] = None
+    if cfg.moe is not None:
+        if not divisible(cfg.moe.n_experts, mesh, rules.rules.get("experts")):
+            # expert dim replicated; shard each expert's hidden dim instead
+            overrides["experts"] = None
+        else:
+            # expert-parallel: the expert hidden dim must then stay unsharded
+            overrides["expert_mlp"] = None
+    if not divisible(cfg.vocab_size, mesh, rules.rules.get("vocab")):
+        overrides["vocab"] = None
+    # the 'mlp' rule shards FFN hidden dims AND the SSM projection dims; it
+    # must survive for attention-free archs (d_ff == 0) — test what it shards.
+    mlp_dims = [cfg.d_ff] if cfg.d_ff else []
+    if cfg.ssm is not None:
+        from ..models.mamba import ssm_dims
+
+        dims = ssm_dims(cfg.d_model, cfg.ssm)
+        in_dim = 2 * dims["d_inner"] + 2 * cfg.ssm.n_groups * cfg.ssm.d_state + dims["n_heads"]
+        mlp_dims += [dims["d_inner"], dims["conv_dim"], in_dim]
+    if any(not divisible(d, mesh, rules.rules.get("mlp")) for d in mlp_dims):
+        overrides["mlp"] = None
+    return rules.with_overrides(**overrides) if overrides else rules

@@ -1,0 +1,186 @@
+"""Batched serving engine with RE-constrained decoding.
+
+The paper's parser automaton becomes a first-class *serving* feature:
+structured-output decoding.  ``TokenDFA`` lifts the byte/char-class parser DFA
+to the token vocabulary (token = byte string → composed transition), giving a
+per-state allowed-token mask; ``ServeEngine.generate`` applies the mask before
+sampling, so every emitted sequence is a prefix of ``L(e)`` and termination is
+only allowed in accepting states — grammar-guaranteed output, driven by the
+same artifacts (segments → NFA → DFA) the parallel parser uses.
+
+The engine itself is the standard loop: step-wise prefill populating the KV /
+SSM caches, then greedy or temperature decode, batched, jit-compiled once.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.automata import DFA, build_dfa, build_nfa
+from ..core.matrices import ParserMatrices
+from ..models.config import ModelConfig
+from ..models.model import decode_step, make_cache
+
+
+# ------------------------------------------------------------- token DFA
+
+
+@dataclasses.dataclass
+class TokenDFA:
+    """Parser DFA lifted to a token vocabulary.
+
+    ``delta``: (n_states, vocab) int32 — next state or -1 (dead).
+    ``final``: (n_states,) bool — states where EOS is allowed.
+    """
+
+    delta: np.ndarray
+    final: np.ndarray
+    initial: int
+
+    @classmethod
+    def from_matrices(
+        cls,
+        matrices: ParserMatrices,
+        vocab: Sequence[bytes],
+        dfa: Optional[DFA] = None,
+    ) -> "TokenDFA":
+        nfa = build_nfa(matrices.table)
+        if dfa is None:
+            dfa = build_dfa(nfa)
+        # complete the (state, class) table lazily over reachable states
+        n0 = dfa.n_states
+        byte_cls = matrices.byte_to_class
+        vocab_classes = [
+            byte_cls[np.frombuffer(t, dtype=np.uint8)] if len(t) else np.zeros(0, np.int64)
+            for t in vocab
+        ]
+        delta_rows: List[np.ndarray] = []
+        state_ids: Dict[int, int] = {}
+
+        def token_step(sid: int, classes) -> int:
+            cur: Optional[int] = sid
+            for c in classes:
+                if cur is None:
+                    return -1
+                cur = dfa.step(cur, int(c))
+            return -1 if cur is None else cur
+
+        # BFS over token transitions (the byte-DFA is already closed; token
+        # transitions only visit existing byte-DFA states)
+        work = [dfa.initial[0]]
+        seen = {dfa.initial[0]}
+        rows: Dict[int, np.ndarray] = {}
+        while work:
+            sid = work.pop()
+            row = np.full(len(vocab), -1, dtype=np.int32)
+            for tid, classes in enumerate(vocab_classes):
+                nxt = token_step(sid, classes)
+                row[tid] = nxt
+                if nxt >= 0 and nxt not in seen:
+                    seen.add(nxt)
+                    work.append(nxt)
+            rows[sid] = row
+        n = max(seen) + 1
+        delta = np.full((n, len(vocab)), -1, dtype=np.int32)
+        for sid, row in rows.items():
+            delta[sid] = row
+        final = np.zeros(n, dtype=bool)
+        for sid in seen:
+            final[sid] = dfa.final[sid]
+        return cls(delta=delta, final=final, initial=dfa.initial[0])
+
+
+def byte_vocab(vocab_size: int) -> List[bytes]:
+    """Token id = byte id (ids ≥ 256 are non-lexical controls → dead)."""
+    return [bytes([i]) if i < 256 else b"\xff\xff" for i in range(vocab_size)]
+
+
+# ---------------------------------------------------------------- engine
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: np.ndarray           # (b, n_new)
+    accepted: Optional[np.ndarray] = None   # constraint acceptance per row
+
+
+class ServeEngine:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        *,
+        max_seq: int = 256,
+        batch: int = 1,
+        tp: int = 1,
+        eos_id: Optional[int] = None,
+    ):
+        self.cfg = cfg
+        self.params = params
+        self.max_seq = max_seq
+        self.batch = batch
+        self.tp = tp
+        self.eos_id = eos_id
+        self._step = jax.jit(lambda p, c, t: decode_step(p, c, t, cfg, tp))
+
+    def new_caches(self):
+        return make_cache(self.cfg, self.batch, self.max_seq, self.tp)
+
+    def generate(
+        self,
+        prompts: np.ndarray,          # (b, Lp) int32
+        max_new: int,
+        *,
+        temperature: float = 0.0,
+        seed: int = 0,
+        constraint: Optional[TokenDFA] = None,
+    ) -> GenerationResult:
+        b, Lp = prompts.shape
+        assert b == self.batch
+        caches = self.new_caches()
+        logits = None
+        for t in range(Lp):  # step-wise prefill (exercises the cache path)
+            logits, caches = self._step(self.params, caches, prompts[:, t : t + 1])
+        key = jax.random.PRNGKey(seed)
+        states = (
+            np.full(b, constraint.initial, dtype=np.int32) if constraint is not None else None
+        )
+        out = np.zeros((b, max_new), dtype=np.int32)
+        done = np.zeros(b, dtype=bool)
+        for i in range(max_new):
+            lg = np.asarray(logits[:, -1], np.float32)       # (b, V)
+            if constraint is not None:
+                mask = constraint.delta[states] >= 0          # (b, V)
+                if self.eos_id is not None:
+                    mask[:, self.eos_id] = constraint.final[states]
+                lg = np.where(mask, lg, -np.inf)
+                # dead-end guard: if nothing is allowed, force EOS/stop
+                stuck = ~mask.any(axis=1)
+                done |= stuck
+            if temperature <= 0.0:
+                nxt = lg.argmax(axis=-1).astype(np.int32)
+            else:
+                key, sub = jax.random.split(key)
+                g = np.asarray(
+                    jax.random.gumbel(sub, lg.shape), np.float32
+                )
+                nxt = (lg / temperature + g).argmax(axis=-1).astype(np.int32)
+            if self.eos_id is not None:
+                done |= nxt == self.eos_id
+            out[:, i] = nxt
+            if constraint is not None:
+                alive = ~done
+                states[alive] = constraint.delta[states[alive], nxt[alive]]
+            if done.all():
+                out = out[:, : i + 1]
+                break
+            logits, caches = self._step(self.params, caches, nxt[:, None])
+        accepted = None
+        if constraint is not None:
+            accepted = np.where(states >= 0, constraint.final[np.maximum(states, 0)], False)
+        return GenerationResult(tokens=out, accepted=accepted)

@@ -1,0 +1,14 @@
+import os
+import sys
+from pathlib import Path
+
+# Tests see the REAL device count (1 CPU); only launch/dryrun.py forces 512.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, str(Path(__file__).parent))          # tests/oracle.py
+sys.path.insert(0, str(Path(__file__).parents[1] / "src"))
+
+from hypothesis import settings
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")

@@ -1,0 +1,76 @@
+"""Brute-force oracles for the parser tests.
+
+``enumerate_lsts``: all LSTs of a text by DFS over the numbered RE's Glushkov
+graph (paper Prop. 1: the LST language is the local language of ``e# ⊣``) —
+completely independent of segments/automata/matrices, so it cross-checks the
+entire production pipeline.
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+from repro.core.numbering import END, EPS, NumberedRE, TERM
+
+
+def enumerate_lsts(
+    numbered: NumberedRE, text: bytes, limit: int = 100_000, rep_limit: int = 2
+) -> List[Tuple[int, ...]]:
+    """All LSTs as tuples of sids.  ``rep_limit`` bounds per-metasymbol repeats
+    between consecutive terminals (matches the tool's App. A policy)."""
+    syms = numbered.symbols
+    follow = numbered.follow
+    classes = [numbered.byte_to_class[b] for b in text]
+    n = len(classes)
+    out: List[Tuple[int, ...]] = []
+
+    def matches(sid: int, pos: int) -> bool:
+        s = syms[sid]
+        if s.kind != TERM or pos >= n:
+            return False
+        return classes[pos] != 0 and classes[pos] in numbered.term_classes[sid]
+
+    # DFS states: (sid just taken, chars consumed, path, counts since last terminal)
+    stack = []
+    for s0 in sorted(numbered.first):
+        stack.append((s0, (s0,), 0, {s0: 1}))
+    while stack:
+        sid, path, consumed, counts = stack.pop()
+        s = syms[sid]
+        if s.kind == END:
+            if consumed == n:
+                out.append(path)
+                if len(out) >= limit:
+                    return out
+            continue
+        if s.kind == TERM:
+            if not matches(sid, consumed):
+                continue
+            consumed += 1
+            counts = {}
+        for nxt in sorted(follow.get(sid, ())):
+            c = counts.get(nxt, 0)
+            if c >= rep_limit and syms[nxt].kind != TERM and syms[nxt].kind != END:
+                continue
+            nc = dict(counts)
+            nc[nxt] = c + 1
+            stack.append((nxt, path + (nxt,), consumed, nc))
+    return out
+
+
+def lst_to_segments(numbered: NumberedRE, lst: Tuple[int, ...]) -> List[Tuple[int, ...]]:
+    """Factor an LST (sid sequence) into its maximal segments."""
+    syms = numbered.symbols
+    segs: List[Tuple[int, ...]] = []
+    cur: List[int] = []
+    for sid in lst:
+        cur.append(sid)
+        if syms[sid].kind in (TERM, END):
+            segs.append(tuple(cur))
+            cur = []
+    assert not cur, "LST must end with an end-letter"
+    return segs
+
+
+def render_lst(numbered: NumberedRE, lst: Tuple[int, ...]) -> str:
+    return "".join(numbered.display_sym(s) for s in lst)

@@ -1,0 +1,89 @@
+"""App. A features through the full pipeline: partial syntax modeling
+(operator masking), infinite ambiguity, character classes as generalized
+segments, extra parentheses."""
+
+import numpy as np
+import pytest
+
+from repro.core.engine import ParserEngine
+from repro.core.numbering import OP_ALT, OP_CAT, number_regex
+from repro.core.reference import ParallelArtifacts
+from repro.core.segments import compute_segments
+from repro.core.serial import SerialParser, parse_serial_matrix
+
+
+def test_partial_syntax_masking_reduces_states():
+    """App. A: masking operators removes their paren pairs from LSTs and
+    shrinks the automaton; parsing semantics (acceptance) are unchanged."""
+    full = compute_segments(number_regex("(ab|a)*"))
+    masked = compute_segments(number_regex("(ab|a)*", mask_ops=(OP_ALT, OP_CAT)))
+    assert masked.n <= full.n
+    pf = SerialParser("(ab|a)*")
+    pm = SerialParser("(ab|a)*", mask_ops=(OP_ALT, OP_CAT))
+    for text in ["", "a", "ab", "aab", "ba", "abab"]:
+        assert pf.accepts(text) == pm.accepts(text), text
+    # masked LSTs contain no alt/cat parens
+    s = pm.parse("aab")
+    lst = s.lst_string(next(s.iter_trees()))
+    # only the star and group pairs remain numbered
+    assert lst.count("(") < pf.parse("aab").lst_string(
+        next(pf.parse("aab").iter_trees())
+    ).count("(")
+
+
+def test_infinitely_ambiguous_re_returns_finite_sample():
+    """App. A: (a|ε)*-style REs return a finite representative LST sample."""
+    p = SerialParser("(a*|ab)+", inf_limit=2)
+    s = p.parse("a")
+    assert s.accepted
+    n = s.count_trees()
+    assert 1 <= n < 1000  # finite despite infinite true ambiguity
+    for path in s.iter_trees(limit=5):
+        lst = s.lst_string(path)
+        assert lst.count("(") == lst.count(")")
+
+
+def test_infinite_ambiguity_parallel_equals_serial():
+    art = ParallelArtifacts.generate("(a*|ab)+")
+    eng = ParserEngine(art.matrices)
+    for text in ["a", "ab", "aab", "abab", ""]:
+        ref = parse_serial_matrix(art.matrices, text)
+        got = eng.parse(text, n_chunks=3)
+        assert np.array_equal(ref.columns, got.columns), text
+
+
+def test_char_classes_generalized_segments():
+    """Fig. A1: classes keep the automaton compact — [a-z]+ has O(1) segments
+    (not 26), and overlapping classes partition correctly."""
+    t = compute_segments(number_regex("[a-z]+"))
+    assert t.n <= 4
+    # overlapping classes [ab] and [bc]: partition {a},{b},{c}
+    t2 = compute_segments(number_regex("[ab][bc]"))
+    p = SerialParser("[ab][bc]")
+    for text, ok in [("ab", True), ("bc", True), ("bb", True), ("ba", False),
+                     ("ca", False), ("aa", False)]:
+        assert p.accepts(text) == ok, text
+
+
+def test_extra_parentheses_groups_extracted():
+    """App. A extra parens: a(bc) ≡ abc for the language, but the group is
+    numbered and extractable from the SLPF."""
+    p1 = SerialParser("a(bc)")
+    p2 = SerialParser("abc")
+    for text in ["abc", "ab", "abcd"]:
+        assert p1.accepts(text) == p2.accepts(text)
+    from repro.core.numbering import OPEN, OP_GROUP
+
+    s = p1.parse("abc")
+    g = next(sym.num for sym in p1.table.numbered.symbols
+             if sym.kind == OPEN and sym.op == OP_GROUP)
+    assert s.get_matches(g) == [(1, 3)]
+
+
+def test_wildcard_and_escapes_end_to_end():
+    art = ParallelArtifacts.generate(r"a.c\.")
+    eng = ParserEngine(art.matrices)
+    assert eng.parse("axc.", 2).accepted
+    assert eng.parse("a.c.", 2).accepted
+    assert not eng.parse("axcx", 2).accepted
+    assert not eng.parse("a\nc.", 2).accepted  # '.' excludes newline

@@ -1,0 +1,69 @@
+"""Parser NFA / DFA / ME-DFA constructions (paper Sect. 2.3.4, 3.1, Tab. 5)."""
+
+import numpy as np
+import pytest
+
+from repro.core.automata import build_dfa, build_medfa, build_nfa
+from repro.core.segments import compute_segments
+
+
+def test_paper_tab5_dfa_counts_exact():
+    """Tab. 5 DFA column reproduces EXACTLY: |DFA(e(k))| = 2^{k+1} + 1."""
+    for k in range(1, 8):
+        t = compute_segments(f"(a|b)*a(a|b){{{k}}}")
+        nfa = build_nfa(t)
+        dfa = build_dfa(nfa)
+        assert dfa.n_states == 2 ** (k + 1) + 1, k
+
+
+def test_medfa_entries_equal_segments():
+    """The ME-DFA's defining property (Sect. 3.1): one entry per segment —
+    speculation bounded by ℓ (linear), not the DFA state count (exponential)."""
+    for k in range(1, 8):
+        t = compute_segments(f"(a|b)*a(a|b){{{k}}}")
+        nfa = build_nfa(t)
+        medfa = build_medfa(nfa)
+        assert len(medfa.initial) == t.n == 2 * k + 7
+        # entry j is the singleton {j}
+        for j in range(t.n):
+            assert medfa.states[medfa.initial[j]] == frozenset({j})
+        # and the ME-DFA contains every DFA state's reachable structure
+        dfa = build_dfa(nfa)
+        assert medfa.n_states >= dfa.n_states - 1  # T1 = I may not be a singleton
+
+
+def test_dfa_equivalent_to_nfa():
+    """DFA and NFA accept the same language (powerset correctness)."""
+    import itertools
+
+    t = compute_segments("(ab|a)*")
+    nfa = build_nfa(t)
+    dfa = build_dfa(nfa)
+    b2c = t.numbered.byte_to_class
+    for n in range(0, 6):
+        for s in itertools.product("ab", repeat=n):
+            classes = [b2c[ord(c)] for c in s]
+            d = dfa.run(dfa.initial[0], classes)
+            assert nfa.accepts(classes) == (d is not None and dfa.final[d])
+
+
+def test_reverse_nfa_recognizes_reversal():
+    import itertools
+
+    t = compute_segments("(ab|a)*c")
+    nfa = build_nfa(t)
+    rnfa = nfa.reverse()
+    b2c = t.numbered.byte_to_class
+    for n in range(0, 5):
+        for s in itertools.product("abc", repeat=n):
+            classes = [b2c[ord(c)] for c in s]
+            assert nfa.accepts(classes) == rnfa.accepts(classes[::-1])
+
+
+def test_transition_labels_are_source_end_letters():
+    """Sect. 2.3.4: arc label = char class read by the SOURCE segment."""
+    t = compute_segments("(ab|a)*")
+    nfa = build_nfa(t)
+    for src, by_cls in enumerate(nfa.delta):
+        for cls in by_cls:
+            assert cls in t.seg_classes[src]

@@ -1,0 +1,114 @@
+"""JAX parallel engine (core/engine.py) vs serial oracle; sharded path."""
+
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.engine import EngineTables, ParserEngine
+from repro.core.reference import ParallelArtifacts
+from repro.core.serial import parse_serial_matrix
+from repro.data.regen import random_regex, sample_string
+
+
+@pytest.fixture(scope="module")
+def art():
+    return ParallelArtifacts.generate("(a|b|ab)+")
+
+
+@pytest.fixture(scope="module")
+def engine(art):
+    return ParserEngine(art.matrices)
+
+
+@pytest.mark.parametrize("text,c", [
+    ("abab", 1), ("abab", 2), ("abab", 4), ("ababab", 3),
+    ("", 2), ("b", 1), ("ba", 2), ("a" * 23, 5),
+])
+def test_engine_matches_serial(art, engine, text, c):
+    ref = parse_serial_matrix(art.matrices, text)
+    got = engine.parse(text, n_chunks=c)
+    assert np.array_equal(ref.columns, got.columns), (text, c)
+
+
+def test_identity_padding_is_noop(art, engine):
+    """PAD-class chunks (identity matrices) never change the SLPF."""
+    text = "ababa"
+    a = engine.parse(text, n_chunks=2)   # k=3, 1 pad char
+    b = engine.parse(text, n_chunks=5)   # k=1, no pad
+    c = engine.parse(text, n_chunks=4)   # k=2, 3 pads
+    assert np.array_equal(a.columns, b.columns)
+    assert np.array_equal(a.columns, c.columns)
+
+
+def test_lane_padding_invariance(art):
+    """Padding ℓ to 128 lanes (kernel alignment) is semantics-free."""
+    e32 = ParserEngine(art.matrices, lane_pad=32)
+    e128 = ParserEngine(art.matrices, lane_pad=128)
+    for text in ["abab", "ba", "aabba"]:
+        assert np.array_equal(
+            e32.parse(text, 3).columns, e128.parse(text, 3).columns
+        )
+
+
+@given(st.integers(0, 5_000), st.integers(3, 8), st.integers(1, 5))
+@settings(max_examples=20, deadline=None)
+def test_property_engine_equals_serial(seed, size, c):
+    from repro.core.numbering import number_regex
+    from repro.core.segments import compute_segments
+
+    rng = np.random.Generator(np.random.Philox(seed))
+    ast = random_regex(size, rng)
+    art = ParallelArtifacts.generate(compute_segments(number_regex(ast)))
+    eng = ParserEngine(art.matrices)
+    text = sample_string(ast, rng)[:10]
+    ref = parse_serial_matrix(art.matrices, text)
+    got = eng.parse(text, n_chunks=c)
+    assert np.array_equal(ref.columns, got.columns)
+
+
+@pytest.mark.slow
+def test_sharded_parser_multidevice_subprocess():
+    """The shard_map program on an 8-device host mesh (separate process —
+    device count is locked at jax init).  Asserts SLPF equality and the
+    expected collective footprint (1 all-gather + 1 all-reduce)."""
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, numpy as np, re
+from collections import Counter
+from repro.core.reference import ParallelArtifacts
+from repro.core.serial import parse_serial_matrix
+from repro.core.engine import ParserEngine, make_sharded_parser
+mesh = jax.make_mesh((2, 4), ("pod", "data"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+art = ParallelArtifacts.generate("(a|b|ab)+")
+eng = ParserEngine(art.matrices)
+prog = make_sharded_parser(eng.tables, mesh, ("pod", "data"))
+for txt in ["abababab", "a"*17, "baab"]:
+    cls = eng.classes_of_text(txt)
+    chunks = eng.pad_chunks(cls, 8)
+    col0, cols = prog(eng.tables.N, eng.tables.I, eng.tables.F, chunks)
+    s = eng._assemble(col0, cols, cls)
+    ref = parse_serial_matrix(art.matrices, txt)
+    assert np.array_equal(s.columns, ref.columns), txt
+txt_hlo = jax.jit(prog).lower(
+    eng.tables.N, eng.tables.I, eng.tables.F,
+    jax.ShapeDtypeStruct((8, 64), np.int32)).compile().as_text()
+c = Counter(re.findall(r"(all-gather|all-reduce|all-to-all|reduce-scatter)", txt_hlo))
+assert c["all-gather"] >= 1 and c["all-reduce"] >= 1, c
+print("SHARDED-OK", dict(c))
+"""
+    env = {"PYTHONPATH": str(Path(__file__).parents[1] / "src"), "PATH": "/usr/bin:/bin"}
+    import os
+
+    env.update({k: v for k, v in os.environ.items() if k not in env})
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True, env=env, timeout=600
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "SHARDED-OK" in out.stdout

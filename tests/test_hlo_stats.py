@@ -1,0 +1,70 @@
+"""Trip-count-aware HLO analyzer vs programs with known costs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_stats import analyze_hlo_text
+
+
+def _stats(fn, *args):
+    return analyze_hlo_text(jax.jit(fn).lower(*args).compile().as_text())
+
+
+def test_matmul_flops_exact():
+    a = jax.ShapeDtypeStruct((256, 512), jnp.float32)
+    b = jax.ShapeDtypeStruct((512, 128), jnp.float32)
+    s = _stats(lambda a, b: a @ b, a, b)
+    assert abs(s.flops - 2 * 256 * 512 * 128) / (2 * 256 * 512 * 128) < 0.05
+
+
+def test_scan_trip_count_multiplies():
+    def f(x, w):
+        def body(h, _):
+            return jnp.tanh(h @ w), None
+        h, _ = jax.lax.scan(body, x, None, length=7)
+        return h
+
+    x = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    w = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    s = _stats(f, x, w)
+    expect = 7 * 2 * 128 * 256 * 256
+    assert s.flops >= expect
+    assert s.flops < expect * 1.2
+    assert s.unknown_trips == 0
+
+
+def test_nested_scan_trips():
+    def f(x, w):
+        def inner(h, _):
+            return jnp.minimum(h @ w, 1.0), None
+        def outer(h, _):
+            h2, _ = jax.lax.scan(inner, h, None, length=5)
+            return h2, None
+        h, _ = jax.lax.scan(outer, x, None, length=3)
+        return h
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    s = _stats(f, x, w)
+    expect = 15 * 2 * 64 ** 3
+    assert expect <= s.flops < expect * 1.3
+    assert s.unknown_trips == 0
+
+
+def test_scan_bytes_do_not_explode():
+    """Slice-aware byte model: a scan writing one row per step costs O(rows),
+    not O(steps x full buffer)."""
+    def f(x):
+        def body(c, _):
+            return c + 1.0, c
+        _, ys = jax.lax.scan(body, x, None, length=64)
+        return ys
+
+    x = jax.ShapeDtypeStruct((1024,), jnp.float32)
+    s = _stats(f, x)
+    full = 64 * 1024 * 4
+    # naive counting would be ~64 × (64·1024·4B) = 16.7 MB (O(trips × buffer));
+    # slice-aware stays within a small constant of the data actually moved.
+    assert full / 4 < s.bytes < 8 * full, s.bytes

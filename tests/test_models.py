@@ -1,0 +1,225 @@
+"""Per-architecture smoke tests (deliverable (f)) + layer-level oracles.
+
+Each assigned architecture instantiates a REDUCED same-family config and runs
+one forward/train step and one decode step on CPU, asserting output shapes and
+finiteness.  Deeper checks: decode ≡ full forward (teacher forcing), SSD
+chunked ≡ naive recurrence, MoE routing exactness, blockwise ≡ naive attention.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke
+from repro.models.layers import HeadPlan, blockwise_attention
+from repro.models.model import (
+    decode_step,
+    embed_inputs,
+    backbone,
+    forward_train,
+    init_params,
+    logits_from,
+    make_cache,
+)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step(arch):
+    cfg = get_smoke(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    b, L = 2, 16
+    key = jax.random.PRNGKey(1)
+    batch = {"tokens": jax.random.randint(key, (b, L), 0, cfg.vocab_size)}
+    if cfg.frontend is not None:
+        batch["extra"] = jax.random.normal(
+            key, (b, cfg.frontend.n_extra_tokens, cfg.frontend.feature_dim), jnp.bfloat16
+        )
+    loss, metrics = jax.jit(lambda p, bt: forward_train(p, bt, cfg))(params, batch)
+    assert np.isfinite(float(loss))
+    assert float(metrics["n_tokens"]) > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_decode_step(arch):
+    cfg = get_smoke(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    b = 2
+    caches = make_cache(cfg, b, 32)
+    tok = jnp.zeros((b, 1), jnp.int32)
+    logits, caches2 = jax.jit(lambda p, c, t: decode_step(p, c, t, cfg))(params, caches, tok)
+    assert logits.shape == (b, 1, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    assert int(caches2["pos"]) == 1
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_equals_forward(arch):
+    """Teacher-forced step-wise decode reproduces the full forward logits."""
+    cfg = get_smoke(arch)
+    if cfg.moe is not None:  # disable token dropping for exactness
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    cfg = dataclasses.replace(cfg, dtype="float32", param_dtype="float32",
+                              attn_p_dtype="float32", frontend=None, remat=False)
+    params = init_params(cfg, jax.random.PRNGKey(7))
+    b, L = 1, 10
+    tokens = jax.random.randint(jax.random.PRNGKey(8), (b, L), 0, cfg.vocab_size)
+    x, pos = embed_inputs(params, tokens, cfg)
+    xx, _ = backbone(params, x, cfg, pos, 1, lambda t, a: t)
+    full = np.asarray(logits_from(params, xx, cfg), np.float32)
+    caches = make_cache(cfg, b, 16)
+    step = jax.jit(lambda p, c, t: decode_step(p, c, t, cfg))
+    outs = []
+    for t in range(L):
+        lg, caches = step(params, caches, tokens[:, t : t + 1])
+        outs.append(np.asarray(lg, np.float32)[:, 0])
+    err = np.abs(np.stack(outs, 1) - full).max()
+    assert err < 2e-3, (arch, err)
+
+
+def test_exact_configs_match_assignment():
+    """The full configs carry the exact published dimensions."""
+    spec = {
+        "phi3-medium-14b": (40, 5120, 40, 10, 17920, 100352),
+        "yi-6b": (32, 4096, 32, 4, 11008, 64000),
+        "h2o-danube-3-4b": (24, 3840, 32, 8, 10240, 32000),
+        "tinyllama-1.1b": (22, 2048, 32, 4, 5632, 32000),
+        "mixtral-8x22b": (56, 6144, 48, 8, 16384, 32768),
+        "llama4-scout-17b-a16e": (48, 5120, 40, 8, 8192, 202048),
+        "zamba2-2.7b": (54, 2560, 32, 32, 10240, 32000),
+        "internvl2-1b": (24, 896, 14, 2, 4864, 151655),
+        "musicgen-medium": (48, 1536, 24, 24, 6144, 2048),
+        "mamba2-2.7b": (64, 2560, 1, 1, 0, 50280),
+    }
+    for arch, (L, d, h, kv, ff, V) in spec.items():
+        cfg = get_config(arch)
+        assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                cfg.d_ff, cfg.vocab_size) == (L, d, h, kv, ff, V), arch
+    assert get_config("mixtral-8x22b").moe.n_experts == 8
+    assert get_config("mixtral-8x22b").moe.top_k == 2
+    assert get_config("llama4-scout-17b-a16e").moe.n_experts == 16
+    assert get_config("llama4-scout-17b-a16e").moe.top_k == 1
+    assert get_config("zamba2-2.7b").ssm.d_state == 64
+    assert get_config("mamba2-2.7b").ssm.d_state == 128
+    assert get_config("mamba2-2.7b").is_attention_free
+
+
+def test_ssd_chunked_vs_naive_recurrence():
+    """Mamba-2 SSD chunked algorithm == the per-step recurrence."""
+    from repro.models.mamba import ssd_chunked
+
+    rng = np.random.RandomState(0)
+    b, l, nh, hp, g, n = 2, 16, 4, 8, 1, 5
+    xdt = jnp.asarray(rng.randn(b, l, nh, hp).astype(np.float32)) * 0.3
+    dA = -jnp.asarray(rng.uniform(0.01, 0.5, (b, l, nh)).astype(np.float32))
+    B = jnp.asarray(rng.randn(b, l, g, n).astype(np.float32)) * 0.3
+    C = jnp.asarray(rng.randn(b, l, g, n).astype(np.float32)) * 0.3
+    y, state = ssd_chunked(xdt, dA, B, C, chunk=4)
+    # naive recurrence oracle
+    s = np.zeros((b, nh, hp, n), np.float32)
+    ys = []
+    a = np.exp(np.asarray(dA))
+    Bh = np.repeat(np.asarray(B), nh // g, axis=2)
+    Ch = np.repeat(np.asarray(C), nh // g, axis=2)
+    xe = np.asarray(xdt)
+    for t in range(l):
+        s = a[:, t][..., None, None] * s + np.einsum("bhp,bhn->bhpn", xe[:, t], Bh[:, t])
+        ys.append(np.einsum("bhpn,bhn->bhp", s, Ch[:, t]))
+    np.testing.assert_allclose(np.asarray(y), np.stack(ys, 1), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(state), s, rtol=2e-4, atol=2e-4)
+
+
+def test_moe_routing_no_drop_exact():
+    """With ample capacity, MoE == dense mixture computed naively."""
+    from repro.models.config import MoEConfig
+    from repro.models.moe import declare_moe, moe_ffn
+    from repro.models.layers import tree_init
+
+    cfg = MoEConfig(n_experts=4, top_k=2, d_ff_expert=16, capacity_factor=8.0)
+    decls = declare_moe(8, cfg)
+    params = tree_init(decls, jax.random.PRNGKey(0), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (12, 8), jnp.float32)
+    y, aux = moe_ffn(params, x, cfg)
+    # naive: full softmax top-2 mixture
+    logits = x @ params["router"]
+    probs = jax.nn.softmax(logits, -1)
+    gates, idx = jax.lax.top_k(probs, 2)
+    gates = gates / gates.sum(-1, keepdims=True)
+    ref = np.zeros_like(np.asarray(x))
+    for t in range(12):
+        for j in range(2):
+            e = int(idx[t, j])
+            h = jax.nn.silu(x[t] @ params["w_gate"][e]) * (x[t] @ params["w_up"][e])
+            ref[t] += float(gates[t, j]) * np.asarray(h @ params["w_down"][e])
+    np.testing.assert_allclose(np.asarray(y), ref, rtol=2e-4, atol=2e-4)
+    assert float(aux["moe_lb_loss"]) >= 0.0
+
+
+def test_blockwise_attention_equals_naive():
+    rng = np.random.RandomState(2)
+    b, L, h, hd = 2, 48, 3, 16
+    q = jnp.asarray(rng.randn(b, L, h, hd).astype(np.float32))
+    k = jnp.asarray(rng.randn(b, L, h, hd).astype(np.float32))
+    v = jnp.asarray(rng.randn(b, L, h, hd).astype(np.float32))
+    for window in (None, 5):
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(hd)
+        i, j = np.arange(L)[:, None], np.arange(L)[None, :]
+        m = j <= i
+        if window:
+            m &= j > i - window
+        s = jnp.where(jnp.asarray(m)[None, None], s, -jnp.inf)
+        ref = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(s, -1), v)
+        got = blockwise_attention(q, k, v, causal=True, window=window,
+                                  q_block=16, k_block=16, p_dtype=jnp.float32)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=3e-5)
+        # bf16 probability buffers (§Perf H3): bounded, small degradation
+        got16 = blockwise_attention(q, k, v, causal=True, window=window,
+                                    q_block=16, k_block=16, p_dtype=jnp.bfloat16)
+        np.testing.assert_allclose(np.asarray(got16), np.asarray(ref), atol=2e-2)
+
+
+def test_blockwise_attention_grouped_gqa():
+    """Grouped GQA (no KV repetition) == repeat-then-attend reference."""
+    rng = np.random.RandomState(5)
+    b, L, kv, g, hd = 2, 32, 2, 3, 8
+    h = kv * g
+    q = jnp.asarray(rng.randn(b, L, h, hd).astype(np.float32))
+    k = jnp.asarray(rng.randn(b, L, kv, hd).astype(np.float32))
+    v = jnp.asarray(rng.randn(b, L, kv, hd).astype(np.float32))
+    kr = jnp.repeat(k, g, axis=2)
+    vr = jnp.repeat(v, g, axis=2)
+    # note repeat order: head i uses kv i // g in the grouped form, but
+    # jnp.repeat gives kv i // g as well (repeat along axis) — consistent.
+    ref = blockwise_attention(q, kr, vr, groups=1, causal=True,
+                              q_block=8, k_block=8, p_dtype=jnp.float32)
+    got = blockwise_attention(q, k, v, groups=g, causal=True,
+                              q_block=8, k_block=8, p_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=3e-5)
+
+
+def test_head_plan_padding():
+    plan = HeadPlan.plan(40, 10, 16)     # phi3: 48 q / 12 kv, exact grouping
+    assert (plan.pad_q, plan.pad_kv, plan.groups, plan.grouped) == (48, 12, 4, True)
+    plan = HeadPlan.plan(14, 2, 16)      # internvl2: 16 q / 3 kv, repeat decode
+    assert (plan.pad_q, plan.pad_kv, plan.grouped) == (16, 3, False)
+    plan = HeadPlan.plan(24, 24, 16)     # musicgen MHA: pad to 32, exact
+    assert (plan.pad_q, plan.pad_kv, plan.grouped) == (32, 32, True)
+    plan = HeadPlan.plan(40, 8, 16)      # llama4: 16 kv × 5 = 80 (2× bound)
+    assert (plan.pad_q, plan.pad_kv, plan.grouped) == (80, 16, True)
+    plan = HeadPlan.plan(32, 4, 16)      # divisible: no padding
+    assert (plan.pad_q, plan.pad_kv, plan.grouped) == (32, 4, True)
+
+
+def test_skip_shapes_recorded():
+    """DESIGN §5: long_500k must be skipped for full-attention archs and run
+    for SSM/hybrid/SWA archs."""
+    runs_long = {"h2o-danube-3-4b", "mixtral-8x22b", "zamba2-2.7b", "mamba2-2.7b"}
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        skipped = dict(cfg.skip_shapes)
+        if arch in runs_long:
+            assert "long_500k" not in skipped, arch
+        else:
+            assert "long_500k" in skipped, arch

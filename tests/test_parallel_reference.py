@@ -1,0 +1,92 @@
+"""Paper-faithful parallel algorithm (Sect. 3.2 / Tab. 6 / Ex. 6) vs serial."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.reference import (
+    ParallelArtifacts,
+    parse_parallel_reference,
+    recognize_parallel,
+    split_chunks,
+)
+from repro.core.serial import parse_serial_matrix
+from repro.data.regen import random_regex, sample_string
+
+
+def test_paper_ex6_trace():
+    """Ex. 6: x=abaaba with c=3 chunks — one LST, singleton clean columns."""
+    art = ParallelArtifacts.generate("(ab|a)*")
+    s = parse_parallel_reference(art, "abaaba", c=3)
+    assert s.accepted and s.count_trees() == 1
+    assert [int(c.sum()) for c in s.columns] == [1] * 7
+    lst = s.lst_string(next(s.iter_trees()))
+    assert lst.count("a") == 4 and lst.count("b") == 2
+
+
+def test_fig9_four_trees():
+    """Fig. 9: e3, x=abab has exactly 4 LSTs in the clean SLPF."""
+    art = ParallelArtifacts.generate("(a|b|ab)+")
+    s = parse_parallel_reference(art, "abab", c=2)
+    assert s.count_trees() == 4
+
+
+@pytest.mark.parametrize("c", [1, 2, 3, 5, 8])
+def test_chunk_count_invariance(c):
+    art = ParallelArtifacts.generate("(a|b|ab)+")
+    ref = parse_serial_matrix(art.matrices, "ababab")
+    got = parse_parallel_reference(art, "ababab", c=c)
+    assert np.array_equal(ref.columns, got.columns)
+
+
+@pytest.mark.parametrize("fused", [False, True])
+def test_fused_builder_merger_equivalence(fused):
+    """Fig. 14's unified builder&merger computes the same clean SLPF."""
+    art = ParallelArtifacts.generate("x(yz|y)*z?")
+    import itertools
+
+    for n in range(1, 7):
+        for chars in itertools.islice(itertools.product("xyz", repeat=n), 20):
+            text = "".join(chars)
+            ref = parse_serial_matrix(art.matrices, text)
+            got = parse_parallel_reference(art, text, c=3, fused=fused)
+            assert np.array_equal(ref.columns, got.columns), text
+
+
+def test_parallel_recognizer():
+    art = ParallelArtifacts.generate("(ab|a)*c")
+    for text in ["c", "abc", "aac", "ab", "abac", ""]:
+        assert recognize_parallel(art, text, c=3) == parse_serial_matrix(
+            art.matrices, text
+        ).accepted
+
+
+def test_split_chunks_partitions():
+    classes = np.arange(17, dtype=np.int32)
+    for c in (1, 2, 3, 5, 17, 30):
+        chunks = split_chunks(classes, c)
+        assert np.array_equal(np.concatenate(chunks), classes)
+        sizes = [len(ch) for ch in chunks]
+        assert max(sizes) - min(sizes) <= 1  # near-equal split
+
+
+@given(st.integers(0, 5_000), st.integers(3, 8), st.integers(1, 6))
+@settings(max_examples=25, deadline=None)
+def test_property_parallel_equals_serial(seed, size, c):
+    """Random REs × random texts × random chunk counts: identical SLPFs."""
+    from repro.core.numbering import number_regex
+    from repro.core.segments import compute_segments
+
+    rng = np.random.Generator(np.random.Philox(seed))
+    ast = random_regex(size, rng)
+    art = ParallelArtifacts.generate(compute_segments(number_regex(ast)))
+    for _ in range(2):
+        text = sample_string(ast, rng)[:10]
+        ref = parse_serial_matrix(art.matrices, text)
+        got = parse_parallel_reference(art, text, c=c, fused=bool(seed % 2))
+        assert np.array_equal(ref.columns, got.columns)
+    # also one invalid-ish random text
+    bad = bytes(rng.integers(97, 123, size=6).astype(np.uint8))
+    ref = parse_serial_matrix(art.matrices, bad)
+    got = parse_parallel_reference(art, bad, c=c)
+    assert np.array_equal(ref.columns, got.columns)

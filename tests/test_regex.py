@@ -1,0 +1,69 @@
+"""RE string parser / AST utilities (core/regex.py)."""
+
+import pytest
+
+from repro.core import regex as rx
+
+
+def test_basic_ast():
+    ast = rx.parse_regex("(ab|a)*")
+    assert isinstance(ast, rx.Star)
+    assert isinstance(ast.item, rx.Group)
+    alt = ast.item.item
+    assert isinstance(alt, rx.Alt) and len(alt.items) == 2
+
+
+def test_escapes_classes_wildcard():
+    ast = rx.parse_regex(r"\(x[0-9a-f].\n")
+    cat = ast
+    assert isinstance(cat, rx.Cat)
+    assert cat.items[0] == rx.Lit(ord("("))
+    cc = cat.items[2]
+    assert isinstance(cc, rx.CharClass) and cc.contains(ord("7")) and cc.contains(ord("c"))
+    assert not cc.contains(ord("g"))
+    wild = cat.items[3]
+    assert isinstance(wild, rx.CharClass) and wild.contains(ord("z")) and not wild.contains(10)
+    assert cat.items[4] == rx.Lit(10)
+
+
+def test_negated_class():
+    cc = rx.parse_regex("[^0-9]")
+    assert isinstance(cc, rx.CharClass)
+    assert cc.contains(ord("a")) and not cc.contains(ord("5"))
+
+
+def test_bounded_repetition():
+    ast = rx.parse_regex("a{2,4}")
+    assert isinstance(ast, rx.Repeat) and (ast.lo, ast.hi) == (2, 4)
+    ast = rx.parse_regex("a{3}")
+    assert (ast.lo, ast.hi) == (3, 3)
+    ast = rx.parse_regex("a{2,}")
+    assert (ast.lo, ast.hi) == (2, None)
+    with pytest.raises(rx.RegexSyntaxError):
+        rx.parse_regex("a{4,2}")
+
+
+def test_nullable_and_infinite_ambiguity():
+    assert rx.nullable(rx.parse_regex("a*"))
+    assert not rx.nullable(rx.parse_regex("a+"))
+    assert rx.nullable(rx.parse_regex("(a|\\e)"))
+    # paper: (a|ε)* is infinitely ambiguous (iterator over nullable body)
+    assert rx.infinitely_ambiguous(rx.parse_regex("(a|\\e)*"))
+    assert rx.infinitely_ambiguous(rx.parse_regex("(a*|ab)+"))
+    assert not rx.infinitely_ambiguous(rx.parse_regex("(ab|a)*"))
+
+
+def test_node_size_matches_paper_family():
+    # Ex. 5: ||e(k)|| = 3k + 7 on the paper's counting (3 symbols per repeat
+    # copy: a, b, one union pair).  Our parser additionally numbers the user's
+    # grouping parens (App. A extra parens): one extra symbol per copy inside
+    # the repeat (4k) and one around the starred union (+1): 4k + 8.
+    for k in range(1, 6):
+        ast = rx.parse_regex(f"(a|b)*a(a|b){{{k}}}")
+        assert rx.node_size(ast) == 4 * k + 8
+
+
+def test_syntax_errors():
+    for bad in ["(a", "a)", "[a", "a{", "*a", "a|*"]:
+        with pytest.raises(rx.RegexSyntaxError):
+            rx.parse_regex(bad)

@@ -1,0 +1,74 @@
+"""Generic chunked three-phase scan (core/scan.py) — the paper's schema."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.scan import (
+    associative_prefix,
+    chunk_fold,
+    chunked_scan,
+    exclusive_entries,
+)
+
+AFFINE_COMBINE = lambda later, earlier: (
+    later[0] * earlier[0],
+    later[0] * earlier[1] + later[1],
+)
+AFFINE_APPLY = lambda e, s: e[0] * s + e[1]
+
+
+def _serial_fold(a, b, init):
+    s, outs = init, []
+    for t in range(len(a)):
+        s = a[t] * s + b[t]
+        outs.append(s)
+    return np.stack(outs)
+
+
+@given(st.integers(0, 1000), st.sampled_from([1, 2, 3, 4, 6, 12]))
+@settings(max_examples=25, deadline=None)
+def test_chunked_scan_equals_fold(seed, n_chunks):
+    rng = np.random.RandomState(seed)
+    n = 24
+    a = jnp.asarray(rng.uniform(0.5, 1.0, n).astype(np.float32))
+    b = jnp.asarray(rng.randn(n).astype(np.float32))
+    init = jnp.float32(rng.randn())
+    got = chunked_scan(
+        AFFINE_COMBINE, AFFINE_APPLY, (a, b), init,
+        (jnp.float32(1.0), jnp.float32(0.0)), n_chunks,
+    )
+    ref = _serial_fold(np.asarray(a), np.asarray(b), float(init))
+    np.testing.assert_allclose(np.asarray(got), ref, rtol=2e-5, atol=1e-5)
+
+
+def test_associative_prefix_matmul():
+    rng = np.random.RandomState(0)
+    mats = jnp.asarray(rng.rand(5, 3, 3).astype(np.float32))
+    pref = associative_prefix(lambda l, e: l @ e, mats)
+    acc = np.eye(3, dtype=np.float32)
+    for i in range(5):
+        acc = np.asarray(mats[i]) @ acc
+        np.testing.assert_allclose(np.asarray(pref[i]), acc, rtol=2e-4)
+
+
+def test_exclusive_entries_shift():
+    a = jnp.asarray(np.array([2.0, 3.0, 5.0], np.float32))
+    b = jnp.zeros(3, jnp.float32)
+    entries = exclusive_entries(
+        AFFINE_COMBINE, AFFINE_APPLY, (a, b), jnp.float32(1.0)
+    )
+    np.testing.assert_allclose(np.asarray(entries), [1.0, 2.0, 6.0])
+
+
+def test_chunk_fold_matrix_monoid():
+    rng = np.random.RandomState(1)
+    mats = jnp.asarray((rng.rand(6, 4, 4) < 0.3).astype(np.float32))
+    combine = lambda l, e: jnp.minimum(l @ e, 1.0)
+    out = chunk_fold(combine, mats, jnp.eye(4, dtype=jnp.float32))
+    acc = np.eye(4, dtype=np.float32)
+    for i in range(6):
+        acc = np.minimum(np.asarray(mats[i]) @ acc, 1.0)
+    np.testing.assert_allclose(np.asarray(out), acc)

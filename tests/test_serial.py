@@ -1,0 +1,81 @@
+"""Serial parsers (Fig. 10 matrix form; Sect. 4.1 DFA form) vs the oracle."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from oracle import enumerate_lsts, render_lst
+from repro.core.matrices import build_matrices
+from repro.core.numbering import number_regex
+from repro.core.segments import compute_segments
+from repro.core.serial import SerialParser, parse_serial_dfa, parse_serial_matrix, recognize
+
+
+def _setup(pat):
+    numbered = number_regex(pat)
+    table = compute_segments(numbered)
+    return numbered, build_matrices(table)
+
+
+def test_paper_ex4_ab():
+    """Ex. 4: clean SLPF of x=ab for e2 — singleton columns, one LST."""
+    numbered, m = _setup("(ab|a)*")
+    s = parse_serial_matrix(m, "ab")
+    assert s.accepted
+    assert [int(c.sum()) for c in s.columns] == [1, 1, 1]
+    assert s.count_trees() == 1
+    lst = s.lst_string(next(s.iter_trees()))
+    assert lst.startswith("1(") and lst.endswith(")1")
+
+
+@pytest.mark.parametrize("pat", ["(ab|a)*", "(a|b|ab)+", "a{1,3}b?", "x(yz|y)*z?"])
+def test_tree_sets_match_oracle(pat):
+    """The SLPF encodes exactly the oracle's LST set (count and content)."""
+    import itertools
+
+    numbered, m = _setup(pat)
+    alphabet = "abxyz"
+    for n in range(0, 5):
+        for chars in itertools.islice(itertools.product(alphabet, repeat=n), 40):
+            text = "".join(chars)
+            oracle = {tuple(l) for l in enumerate_lsts(numbered, text.encode())}
+            s = parse_serial_matrix(m, text)
+            assert s.count_trees() == len(oracle), (pat, text)
+            got = set()
+            for path in s.iter_trees():
+                flat = tuple(sid for q in path for sid in s.table.segs[q])
+                got.add(flat)
+            assert got == oracle, (pat, text)
+
+
+def test_dfa_parser_equals_matrix_parser():
+    p = SerialParser("(a|b|ab)+")
+    import itertools
+
+    for n in range(0, 6):
+        for chars in itertools.islice(itertools.product("ab", repeat=n), 30):
+            text = "".join(chars)
+            a = p.parse(text, method="matrix")
+            b = p.parse(text, method="dfa")
+            assert np.array_equal(a.columns, b.columns), text
+
+
+def test_recognizer_matches_parser():
+    p = SerialParser("(ab|a)*c")
+    for text in ["c", "abc", "aac", "ab", "", "abac"]:
+        assert p.accepts(text) == p.parse(text).accepted, text
+
+
+def test_empty_text():
+    p = SerialParser("(ab|a)*")
+    s = p.parse("")
+    assert s.accepted and s.count_trees() == 1  # ε has the single LST ₁()₁
+    p2 = SerialParser("ab")
+    assert not p2.parse("").accepted
+
+
+def test_invalid_text_empty_forest():
+    p = SerialParser("(ab|a)*")
+    s = p.parse("ba")
+    assert not s.accepted and s.count_trees() == 0
+    assert not s.columns.any()  # clean SLPF of invalid text is empty

@@ -1,0 +1,77 @@
+"""Sharding rules / logical axes / shape-aware specs (parallel/sharding.py)."""
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.models.model import abstract_params, param_logical_axes
+from repro.parallel.sharding import MeshRules, adapt_rules_for, divisible
+from repro.train.step import map_with_logical, shape_aware_spec
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # logical 16x16 structure on 1 real device: use abstract mesh
+    from jax.sharding import AbstractMesh
+
+    return AbstractMesh((16, 16), ("data", "model"))
+
+
+def test_resolve_basic(mesh):
+    r = MeshRules()
+    assert r.resolve(("batch", None, "mlp"), mesh) == P("data", None, "model")
+    # axis reuse within one tensor is dropped (specs must be disjoint)
+    assert r.resolve(("mlp", "vocab"), mesh) == P("model")
+
+
+def test_shape_aware_divisibility(mesh):
+    r = MeshRules()
+    # batch 1 cannot shard over 16 devices -> replicated
+    assert shape_aware_spec((1, 128), ("batch", None), mesh, r) == P()
+    assert shape_aware_spec((32, 128), ("batch", None), mesh, r) == P("data")
+    # vocab 151655 % 16 != 0 -> replicated
+    assert shape_aware_spec((151655, 896), ("vocab", None), mesh, r) == P()
+
+
+def test_adapt_rules_per_arch(mesh):
+    r = MeshRules()
+    # phi3: padded q heads 48 shard; kv padded 12 does not divide 16 -> replicated
+    phi3 = adapt_rules_for(get_config("phi3-medium-14b"), mesh, r)
+    assert phi3.rules["heads"] == "model"
+    assert phi3.rules["kv_heads"] is None
+    # mixtral: 8 experts don't divide 16 -> expert-FFN TP instead of EP
+    mix = adapt_rules_for(get_config("mixtral-8x22b"), mesh, r)
+    assert mix.rules["experts"] is None
+    assert mix.rules["expert_mlp"] == "model"
+    # llama4: 16 experts divide 16 -> EP; expert hidden dim then unsharded
+    l4 = adapt_rules_for(get_config("llama4-scout-17b-a16e"), mesh, r)
+    assert l4.rules["experts"] == "model"
+    assert l4.rules["expert_mlp"] is None
+
+
+def test_param_specs_cover_all_leaves(mesh):
+    """Every parameter leaf resolves to a valid, shape-divisible spec."""
+    for arch in ("phi3-medium-14b", "mixtral-8x22b", "mamba2-2.7b", "zamba2-2.7b"):
+        cfg = get_config(arch)
+        rules = adapt_rules_for(cfg, mesh, MeshRules())
+        abstract = abstract_params(cfg, tp=16)
+        logical = param_logical_axes(cfg, tp=16)
+        specs = map_with_logical(
+            abstract, logical,
+            lambda a, lg: shape_aware_spec(a.shape, lg, mesh, rules),
+        )
+        for a, s in zip(jax.tree.leaves(abstract), jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))):
+            for dim, entry in zip(a.shape, tuple(s)):
+                if entry is None:
+                    continue
+                axes = (entry,) if isinstance(entry, str) else entry
+                size = int(np.prod([mesh.shape[ax] for ax in axes]))
+                assert dim % size == 0, (arch, a.shape, s)
+
+
+def test_divisible_helper(mesh):
+    assert divisible(32, mesh, "data")
+    assert not divisible(33, mesh, "data")
+    assert divisible(7, mesh, None)

@@ -1,0 +1,100 @@
+"""SLPF forest API: counting, enumeration, matches, packing, compression."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.matrices import pack_bits, unpack_bits
+from repro.core.serial import SerialParser
+from repro.core.slpf import compress
+
+
+@pytest.fixture(scope="module")
+def parser():
+    return SerialParser("(a|b|ab)+")
+
+
+def test_count_vs_enumeration(parser):
+    s = parser.parse("abab")
+    trees = list(s.iter_trees())
+    assert s.count_trees() == len(trees) == 4
+    # each enumerated path really is a tree: consecutive segments connected
+    for path in trees:
+        for r in range(len(path) - 1):
+            assert path[r + 1] in s.table.delta(path[r], int(s.classes[r]))
+
+
+def test_iter_trees_limit(parser):
+    s = parser.parse("ababab")
+    assert len(list(s.iter_trees(limit=3))) == 3
+
+
+def test_lst_strings_are_balanced(parser):
+    s = parser.parse("abab")
+    for path in s.iter_trees():
+        lst = s.lst_string(path)
+        depth = 0
+        for i, ch in enumerate(lst):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+            assert depth >= 0
+        assert depth == 0
+
+
+def test_get_matches_groups():
+    """App. A extra parens: group spans extracted from the SLPF."""
+    p = SerialParser("x(ab)+y")
+    s = p.parse("xababy")
+    # the Group node wraps "ab"; find its paren number
+    from repro.core.numbering import OPEN, OP_GROUP
+
+    gnum = next(
+        sym.num for sym in p.table.numbered.symbols
+        if sym.kind == OPEN and sym.op == OP_GROUP
+    )
+    spans = s.get_matches(gnum)
+    assert (1, 3) in spans and (3, 5) in spans
+
+
+def test_get_children_structure(parser):
+    s = parser.parse("ab")
+    path = next(s.iter_trees())
+    kids = s.get_children(path)
+    # every span well-formed and within text bounds
+    for num, a, b in kids:
+        assert 0 <= a <= b <= s.n
+
+
+def test_pack_roundtrip(parser):
+    s = parser.parse("ababab")
+    packed = s.pack()
+    from repro.core.slpf import SLPF
+
+    s2 = SLPF.from_packed(s.table, packed, s.classes)
+    assert np.array_equal(s.columns, s2.columns)
+
+
+@given(st.binary(min_size=0, max_size=64))
+@settings(max_examples=30, deadline=None)
+def test_pack_bits_roundtrip_property(data):
+    arr = np.frombuffer(data, dtype=np.uint8).astype(bool)
+    n = len(arr)
+    if n == 0:
+        return
+    packed = pack_bits(arr[None, :], axis=-1)
+    un = unpack_bits(packed, n, axis=-1)
+    assert np.array_equal(un[0], arr)
+
+
+def test_compression_roundtrip(parser):
+    """App. C: SLPF-DFA compression reconstructs the exact forest."""
+    s = parser.parse("ababababab")
+    c = compress(s)
+    s2 = c.reconstruct()
+    assert np.array_equal(s.columns, s2.columns)
+    # compressed size is independent of text length (states interned)
+    s_long = parser.parse("ab" * 200)
+    c_long = compress(s_long)
+    assert len(c_long.states) <= 8  # few distinct columns on periodic text
