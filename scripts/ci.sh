@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# CI smoke gate: tier-1 test suite + a quick benchmark sanity pass.
+#
+#   scripts/ci.sh            # full tier-1 + tab5 smoke bench
+#   scripts/ci.sh --fast     # skip slow (subprocess/multi-device) tests
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+PYTEST_ARGS=(-x -q)
+if [[ "${1:-}" == "--fast" ]]; then
+    PYTEST_ARGS+=(-m "not slow")
+fi
+
+python -m pytest "${PYTEST_ARGS[@]}"
+python -m benchmarks.run --quick --only tab5

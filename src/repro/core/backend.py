@@ -1,0 +1,254 @@
+"""Pluggable three-phase parse backends (reach / join / build&merge).
+
+The paper's decomposition (Sect. 3.2) exists in this repo at three levels:
+the pure-jnp engine, the generic monoid-scan primitive (``core/scan.py``),
+and the Pallas TPU kernels (``repro/kernels``).  This module collapses them
+into ONE runtime schema with swappable phase implementations:
+
+  reach        (c, k) class chunks → (c, ℓp, ℓp) chunk products
+  join         chunk products → forward/backward entry states, expressed as
+               ``core/scan.py``'s ``exclusive_entries`` over the Boolean
+               OR-AND matrix monoid — the SAME scan the Mamba-2 SSD state
+               passing uses, so there is exactly one join implementation.
+  build&merge  (chunks, entries) → clean SLPF columns (Fig. 14, fused)
+
+Backends:
+  * ``JnpBackend``    — pure ``jax.numpy`` phase bodies (vmap over chunks and
+    over the batch axis); the reference device program, runs anywhere.
+  * ``PallasBackend`` — the ``kernels/reach.py`` + ``kernels/build.py``
+    Mosaic kernels, scalar-prefetch DMA pipelining on TPU; on CPU the same
+    calls run with ``interpret=True`` so tests exercise the real BlockSpecs.
+    Chunks and batch rows are driven by ``lax.map`` (the kernels own the
+    intra-chunk grid).
+
+``ParserEngine(backend=...)`` selects by name; ``register_backend`` adds new
+ones (bit-packed VPU, GPU, …) without touching the engine.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple, Type, Union
+
+import jax
+import jax.numpy as jnp
+
+from .scan import exclusive_entries
+
+
+# ----------------------------------------------------------- semiring ops
+
+
+def semiring_matmul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Boolean OR-AND product on {0,1} floats: clamp(a @ b)."""
+    return jnp.minimum(jnp.matmul(a, b, precision=jax.lax.Precision.DEFAULT), 1.0)
+
+
+def semiring_matvec(m: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    return jnp.minimum(m @ v, 1.0)
+
+
+def pack_columns_u32(cols: jnp.ndarray) -> jnp.ndarray:
+    """(…, ℓp) {0,1} floats → (…, ℓp/32) uint32, little-endian bits."""
+    shape = cols.shape
+    lp = shape[-1]
+    assert lp % 32 == 0
+    bits = cols.reshape(shape[:-1] + (lp // 32, 32)).astype(jnp.uint32)
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    return jnp.sum(bits * weights, axis=-1, dtype=jnp.uint32)
+
+
+# ------------------------------------------------------ jnp phase bodies
+
+
+def reach_chunk(N: jnp.ndarray, chunk: jnp.ndarray) -> jnp.ndarray:
+    """Chunk product P = N[y_k] ⊗ … ⊗ N[y_1] — the reach phase (Eq. 6)."""
+    lp = N.shape[-1]
+
+    def step(P, cls):
+        return semiring_matmul(N[cls], P), None
+
+    P, _ = jax.lax.scan(step, jnp.eye(lp, dtype=N.dtype), chunk)
+    return P
+
+
+def build_merge_chunk(
+    N: jnp.ndarray, chunk: jnp.ndarray, entry_f: jnp.ndarray, entry_b: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fig. 14 fused builder&merger for one chunk.
+
+    Returns (M, beta0): M (k, ℓp) clean columns at positions 1..k of the chunk;
+    beta0 (ℓp,) the backward state at the chunk start (used for global C_0).
+    """
+
+    def fstep(v, cls):
+        nv = semiring_matvec(N[cls], v)
+        return nv, nv
+
+    _, fwd = jax.lax.scan(fstep, entry_f, chunk)            # fwd[t] = B_{t+1}
+
+    def bstep(v, cls):
+        nv = semiring_matvec(N[cls].T, v)
+        return nv, nv
+
+    _, bwd_rev = jax.lax.scan(bstep, entry_b, chunk[::-1])  # β_{k-1} … β_0
+    bwd = bwd_rev[::-1]                                     # β_0 … β_{k-1}
+    beta0 = bwd[0]
+    # merge: M[t] = fwd[t] ∧ β_{t+1};  β_k = entry_b
+    bwd_for_merge = jnp.concatenate([bwd[1:], entry_b[None]], axis=0)
+    return fwd * bwd_for_merge, beta0
+
+
+# ------------------------------------------------------- shared join phase
+
+
+def join_entries(
+    P: jnp.ndarray, I: jnp.ndarray, F: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Join phase (Eq. 7) from stacked chunk products P (c, ℓp, ℓp).
+
+    Forward entry of chunk i:  J_i = (P_{i-1} ⊗ … ⊗ P_0) I.
+    Backward entry of chunk i: Ĵ_i = (P_{c-1} ⊗ … ⊗ P_{i+1})ᵀ F — the
+    transposed-suffix form that makes the backward reach free (DESIGN §2).
+
+    Both directions are instances of ``core/scan.exclusive_entries`` over the
+    Boolean matrix monoid — the identical scan the Mamba-2 SSD chunked state
+    passing uses, so the parser and the model share one join implementation.
+    """
+    Jf = exclusive_entries(
+        combine=semiring_matmul,                     # (later, earlier) → later ⊗ earlier
+        act=semiring_matvec,
+        summaries=P,
+        init=I,
+    )
+    # Backward: scan the reversed products with flipped composition, acting by
+    # the transpose; index j of the reversed scan is chunk c-1-j.
+    Jb_rev = exclusive_entries(
+        combine=lambda later, earlier: semiring_matmul(earlier, later),
+        act=lambda m, v: semiring_matvec(m.T, v),
+        summaries=P[::-1],
+        init=F,
+    )
+    return Jf, Jb_rev[::-1]
+
+
+# --------------------------------------------------------------- backends
+
+
+class ParserBackend:
+    """Swappable implementations of the three phases over EngineTables arrays.
+
+    All arrays use the engine's padded layout: N (A+1, ℓp, ℓp) f32, chunks
+    (c, k) int32, entries (c, ℓp) f32.  ``join`` is shared (scan-based);
+    subclasses provide ``reach`` and ``build_merge`` plus a batching strategy.
+    """
+
+    name: str = "abstract"
+    min_lane_pad: int = 32   # segment-dim alignment this backend requires
+
+    def reach(self, N: jnp.ndarray, chunks: jnp.ndarray) -> jnp.ndarray:
+        """(c, k) chunks → (c, ℓp, ℓp) chunk products."""
+        raise NotImplementedError
+
+    def join(
+        self, P: jnp.ndarray, I: jnp.ndarray, F: jnp.ndarray
+    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        return join_entries(P, I, F)
+
+    def build_merge(
+        self, N: jnp.ndarray, chunks: jnp.ndarray, Jf: jnp.ndarray, Jb: jnp.ndarray
+    ) -> jnp.ndarray:
+        """(c, k) chunks + entries → (c, k, ℓp) clean columns."""
+        raise NotImplementedError
+
+    def batch_core(self, core: Callable) -> Callable:
+        """Lift ``core(N, I, F, (c,k) chunks)`` to a (B, c, k) batch axis."""
+        raise NotImplementedError
+
+
+class JnpBackend(ParserBackend):
+    """Pure-jnp phase bodies — vmap everywhere; the reference device program."""
+
+    name = "jnp"
+    min_lane_pad = 32
+
+    def reach(self, N, chunks):
+        return jax.vmap(lambda ch: reach_chunk(N, ch))(chunks)
+
+    def build_merge(self, N, chunks, Jf, Jb):
+        M, _ = jax.vmap(lambda ch, ef, eb: build_merge_chunk(N, ch, ef, eb))(
+            chunks, Jf, Jb
+        )
+        return M
+
+    def batch_core(self, core):
+        return jax.vmap(core, in_axes=(None, None, None, 0))
+
+
+class PallasBackend(ParserBackend):
+    """Mosaic kernels for the two hot loops (scalar-prefetch DMA pipelining).
+
+    ``interpret=None`` auto-selects: real Mosaic on TPU, interpret mode on CPU
+    (kernel bodies run under the Pallas interpreter, validating BlockSpecs and
+    index maps — the CI-checkable form of the TPU program).  Chunk and batch
+    axes run under ``lax.map``: the kernels own the intra-chunk grid, and the
+    sequential outer loop keeps a single (ℓp, ℓp) VMEM working set live.
+    """
+
+    name = "pallas"
+    min_lane_pad = 128   # MXU tile alignment required by the kernels
+
+    def __init__(self, interpret: Union[bool, None] = None):
+        self.interpret = interpret
+
+    def _interp(self) -> bool:
+        if self.interpret is None:
+            from ..kernels.ops import use_interpret
+
+            return use_interpret()
+        return self.interpret
+
+    def reach(self, N, chunks):
+        from ..kernels.reach import reach_chunk_product
+
+        interp = self._interp()
+        return jax.lax.map(
+            lambda ch: reach_chunk_product(N, ch, interpret=interp), chunks
+        )
+
+    def build_merge(self, N, chunks, Jf, Jb):
+        from ..kernels.build import build_merge_chunk as kernel_build_merge
+
+        interp = self._interp()
+        return jax.lax.map(
+            lambda args: kernel_build_merge(N, *args, interpret=interp),
+            (chunks, Jf, Jb),
+        )
+
+    def batch_core(self, core):
+        return lambda N, I, F, batch: jax.lax.map(
+            lambda ch: core(N, I, F, ch), batch
+        )
+
+
+_BACKENDS: Dict[str, Type[ParserBackend]] = {}
+
+
+def register_backend(cls: Type[ParserBackend]) -> Type[ParserBackend]:
+    _BACKENDS[cls.name] = cls
+    return cls
+
+
+register_backend(JnpBackend)
+register_backend(PallasBackend)
+
+
+def get_backend(backend: Union[str, ParserBackend]) -> ParserBackend:
+    """Resolve a backend name (or pass an instance through)."""
+    if isinstance(backend, ParserBackend):
+        return backend
+    try:
+        return _BACKENDS[backend]()
+    except KeyError:
+        raise ValueError(
+            f"unknown parse backend {backend!r}; known: {sorted(_BACKENDS)}"
+        ) from None

@@ -1,76 +1,90 @@
-"""JAX parallel parsing engine — the paper's algorithm, TPU-native (DESIGN §2).
+"""Layered parse runtime: backend-pluggable three-phase engine, batched front-end.
 
-Mapping from the paper's phases to this engine (all validated against
-``core/reference.py``, the paper-faithful oracle):
+The runtime is organised in three layers (bottom-up):
+
+  phase backends   ``core/backend.py`` — swappable implementations of the
+                   paper's reach / join / build&merge phases over the padded
+                   table layout.  ``jnp`` is the pure-``jax.numpy`` reference
+                   device program; ``pallas`` wires in the Mosaic kernels of
+                   ``repro/kernels`` (scalar-prefetch DMA pipelining on TPU,
+                   interpret mode on CPU so CI exercises the real BlockSpecs).
+                   The join phase is shared by every backend: it is
+                   ``core/scan.py``'s ``exclusive_entries`` over the Boolean
+                   OR-AND matrix monoid — the same scan primitive the Mamba-2
+                   SSD chunked state passing uses.
+
+  engine           ``ParserEngine(backend=...)`` compiles ONE program per
+                   static chunk shape (c, k) and runs texts through it.
+                   Texts pad to equal static chunks with the PAD class, whose
+                   matrix is the identity — a semantic no-op replacing the
+                   paper's load-balancing fragments (Sect. 4.3) with
+                   SPMD-exact balance.  Chunk lengths are *bucketed* to a
+                   small set of power-of-two shapes so arbitrary text lengths
+                   hit a handful of compiled programs instead of re-jitting
+                   per length (``compile_count`` exposes the trace count).
+                   Zero-length texts flow through the same bucketed path.
+
+  batched front-end ``parse_batch(texts)`` groups mixed-length requests by
+                   shape bucket, pads each group to power-of-two batch slots,
+                   and executes one batched device program per bucket —
+                   request-level serving on top lives in
+                   ``serve/parse_service.py`` (slot pattern of the LM
+                   scheduler).
+
+Mapping from the paper's phases (all validated against ``core/reference.py``,
+the paper-faithful oracle):
 
   reach   Per chunk, the Boolean-semiring matrix chain product
           ``P_i = N_{y_k} ⊗ … ⊗ N_{y_1}`` (ℓ×ℓ).  Column j of ``P_i`` equals
           ``R_{i,j}`` (Eq. 6): all ℓ speculative ME-DFA entries are evaluated
-          *simultaneously* as matrix columns on the MXU.  The ME-DFA's bounded
-          speculation (ℓ entries, never the 2^ℓ DFA states) holds identically.
+          *simultaneously* as matrix columns on the MXU.
 
   join    Eq. (7) becomes an exclusive monoid scan over the chunk products.
-          Cross-device: one all_gather of the (c, ℓ, ℓ) summaries + a replicated
-          log-depth local scan (``core/scan.py``) — O(c·ℓ²) bytes of collective
+          Cross-device: one all_gather of the (c, ℓ, ℓ) summaries + a
+          replicated log-depth local scan — O(c·ℓ²) bytes of collective
           traffic, independent of the text length.
 
-  build & Fig. 14's fused builder&merger: forward Boolean mat-vec scan emits the
-  merge   columns; the backward scan uses the *transposed* matrices and ANDs in
-          place.  Beyond the paper: the backward *reach* phase is free — reverse
-          chunk summaries are the transposes ``P_iᵀ`` (Eq. 5 + product reversal),
-          so only one reach pass is ever computed (paper runs both).
+  build & Fig. 14's fused builder&merger.  Beyond the paper: the backward
+  merge   *reach* phase is free — reverse chunk summaries are the transposes
+          ``P_iᵀ`` (Eq. 5 + product reversal), so only one reach pass is ever
+          computed (paper runs both).
 
-  pad     Texts pad to equal static chunks with the PAD class, whose matrix is
-          the identity — a semantic no-op replacing the paper's load-balancing
-          fragments (Sect. 4.3) with SPMD-exact balance.
-
-Numeric form: {0,1} float32 matrices; ``⊗`` = matmul + min(·,1) (exact in f32 up
-to 2²⁴ ≫ ℓ).  SLPF columns are emitted bit-packed (uint32, 32 segments/word,
-App. C encoding).  The Pallas kernels in ``repro/kernels`` implement the two hot
-loops (reach product, fused build&merge) with explicit VMEM tiling; this module
-is the pure-jnp engine the kernels are verified against, and is itself the
-device program lowered in the multi-pod dry-run.
+Numeric form: {0,1} float32 matrices; ``⊗`` = matmul + min(·,1) (exact in f32
+up to 2²⁴ ≫ ℓ).  SLPF columns are emitted bit-packed (uint32, 32 segments per
+word, App. C encoding).
 """
 
 from __future__ import annotations
 
 import functools
 from dataclasses import dataclass
-from typing import Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .backend import (
+    ParserBackend,
+    build_merge_chunk,
+    get_backend,
+    join_entries,
+    pack_columns_u32,
+    reach_chunk,
+    semiring_matmul,
+    semiring_matvec,
+)
 from .matrices import ParserMatrices, build_matrices, unpack_bits
-from .scan import associative_prefix
+from .scan import linear_index
 from .segments import SegmentTable
 from .slpf import SLPF
 
-
-# ----------------------------------------------------------- semiring ops
-
-
-def semiring_matmul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
-    """Boolean OR-AND product on {0,1} floats: clamp(a @ b)."""
-    return jnp.minimum(jnp.matmul(a, b, precision=jax.lax.Precision.DEFAULT), 1.0)
+# Back-compat alias: the join phase now lives in core/backend.py on top of
+# core/scan.py's exclusive_entries (one scan implementation repo-wide).
+_entries_from_products = join_entries
 
 
-def semiring_matvec(m: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
-    return jnp.minimum(m @ v, 1.0)
-
-
-def pack_columns_u32(cols: jnp.ndarray) -> jnp.ndarray:
-    """(…, ℓp) {0,1} floats → (…, ℓp/32) uint32, little-endian bits."""
-    shape = cols.shape
-    lp = shape[-1]
-    assert lp % 32 == 0
-    bits = cols.reshape(shape[:-1] + (lp // 32, 32)).astype(jnp.uint32)
-    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
-    return jnp.sum(bits * weights, axis=-1, dtype=jnp.uint32)
-
-
-# ---------------------------------------------------------------- engine
+# ---------------------------------------------------------------- tables
 
 
 @dataclass
@@ -108,100 +122,44 @@ class EngineTables:
         )
 
 
-def reach_chunk(N: jnp.ndarray, chunk: jnp.ndarray) -> jnp.ndarray:
-    """Chunk product P = N[y_k] ⊗ … ⊗ N[y_1] — the reach phase (Eq. 6)."""
-    lp = N.shape[-1]
-
-    def step(P, cls):
-        return semiring_matmul(N[cls], P), None
-
-    P, _ = jax.lax.scan(step, jnp.eye(lp, dtype=N.dtype), chunk)
-    return P
+# ------------------------------------------------------------- parse core
 
 
-def build_merge_chunk(
-    N: jnp.ndarray, chunk: jnp.ndarray, entry_f: jnp.ndarray, entry_b: jnp.ndarray
-) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Fig. 14 fused builder&merger for one chunk.
+def make_parse_core(backend: ParserBackend):
+    """Single-text three-phase program over one (c, k) chunk grid.
 
-    Returns (M, beta0): M (k, ℓp) clean columns at positions 1..k of the chunk;
-    beta0 (ℓp,) the backward state at the chunk start (used for global C_0).
+    Returns ``core(N, I, F, chunks) -> (packed col0 (W,), packed cols (c,k,W))``.
     """
 
-    def fstep(v, cls):
-        nv = semiring_matvec(N[cls], v)
-        return nv, nv
+    def parse_core(N, I, F, chunks):
+        P = backend.reach(N, chunks)                     # (c, ℓp, ℓp)
+        Jf, Jb = backend.join(P, I, F)                   # (c, ℓp) each
+        M = backend.build_merge(N, chunks, Jf, Jb)       # (c, k, ℓp)
+        # C_0 = I ∧ β_0 with β_0 = P_0ᵀ Ĵ_0 — the backward state at text start,
+        # recovered from the reach products (no extra backward pass).
+        col0 = I * semiring_matvec(P[0].T, Jb[0])
+        return pack_columns_u32(col0), pack_columns_u32(M)
 
-    _, fwd = jax.lax.scan(fstep, entry_f, chunk)            # fwd[t] = B_{t+1}
-
-    def bstep(v, cls):
-        nv = semiring_matvec(N[cls].T, v)
-        return nv, nv
-
-    _, bwd_rev = jax.lax.scan(bstep, entry_b, chunk[::-1])  # β_{k-1} … β_0
-    bwd = bwd_rev[::-1]                                     # β_0 … β_{k-1}
-    beta0 = bwd[0]
-    # merge: M[t] = fwd[t] ∧ β_{t+1};  β_k = entry_b
-    bwd_for_merge = jnp.concatenate([bwd[1:], entry_b[None]], axis=0)
-    return fwd * bwd_for_merge, beta0
+    return parse_core
 
 
-def _entries_from_products(
-    P: jnp.ndarray, I: jnp.ndarray, F: jnp.ndarray
-) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Join phase from stacked chunk products P (c, ℓp, ℓp).
-
-    Forward entry of chunk i:  J_i  = P_{i-1} ⊗ … ⊗ P_0 applied to I.
-    Backward entry of chunk i: Ĵ   = (P_{c-1} … P_{i+1})ᵀ applied to F —
-    the transposed-suffix form that makes the backward reach free (DESIGN §2).
-    """
-    c = P.shape[0]
-    prefix = associative_prefix(semiring_matmul, P)              # P_i ⊗ … ⊗ P_0
-    Jf = jnp.concatenate(
-        [I[None], jnp.minimum(jnp.einsum("cij,j->ci", prefix[:-1], I), 1.0)], axis=0
-    )                                                            # (c, ℓp)
-    # suffix products S_i = P_{c-1} ⊗ … ⊗ P_{i+1}: reverse, prefix, reverse.
-    Prev = P[::-1]
-    suf_prefix = associative_prefix(lambda later, earlier: semiring_matmul(earlier, later), Prev)
-    # suf_prefix[j] = Prev_0 ⊗ … ⊗ Prev_j composed as P_{c-1} ⊗ … ⊗ P_{c-1-j}
-    Sfull = suf_prefix[::-1]                                     # S'_i = P_{c-1}…P_i
-    Jb = jnp.concatenate(
-        [
-            jnp.minimum(jnp.einsum("cji,j->ci", Sfull[1:], F), 1.0),  # transpose apply
-            F[None],
-        ],
-        axis=0,
-    )                                                            # (c, ℓp): Ĵ for chunk i
-    return Jf, Jb
+def _next_pow2(x: int) -> int:
+    return 1 << max(0, x - 1).bit_length()
 
 
-def _parse_core(
-    N: jnp.ndarray, I: jnp.ndarray, F: jnp.ndarray, chunks: jnp.ndarray
-) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Full three-phase parse of (c, k) class chunks → packed columns.
-
-    Returns (col0 packed (W,), cols packed (c, k, W)).
-    """
-    P = jax.vmap(lambda ch: reach_chunk(N, ch))(chunks)          # (c, ℓp, ℓp)
-    Jf, Jb = _entries_from_products(P, I, F)
-    M, beta0 = jax.vmap(lambda ch, ef, eb: build_merge_chunk(N, ch, ef, eb))(
-        chunks, Jf, Jb
-    )
-    col0 = I * beta0[0]
-    return pack_columns_u32(col0), pack_columns_u32(M)
-
-
-_parse_jit = jax.jit(_parse_core)
+# ---------------------------------------------------------------- engine
 
 
 class ParserEngine:
-    """Single-host engine: jit-compiled chunked parallel parsing."""
+    """Single-host engine: backend-pluggable, shape-bucketed, batch-capable."""
 
     def __init__(
         self,
         matrices_or_table,
         *,
         lane_pad: int = 32,
+        backend: Union[str, ParserBackend] = "jnp",
+        min_chunk_len: int = 8,
     ):
         if isinstance(matrices_or_table, SegmentTable):
             matrices = build_matrices(matrices_or_table)
@@ -209,37 +167,97 @@ class ParserEngine:
             matrices = matrices_or_table
         self.matrices = matrices
         self.table = matrices.table
+        self.backend = get_backend(backend)
+        lane_pad = max(lane_pad, self.backend.min_lane_pad)
         self.tables = EngineTables.from_matrices(matrices, lane_pad=lane_pad)
+        self.min_chunk_len = max(1, min_chunk_len)
+
+        self._compile_count = 0
+
+        def counted_core(N, I, F, chunks, _core=make_parse_core(self.backend)):
+            # Python side effect at trace time: counts compiled programs.
+            self._compile_count += 1
+            return _core(N, I, F, chunks)
+
+        self._jit_batched = jax.jit(self.backend.batch_core(counted_core))
 
     # ------------------------------------------------------------- helpers
+
+    @property
+    def compile_count(self) -> int:
+        """Number of distinct programs traced so far (one per shape bucket)."""
+        return self._compile_count
 
     def classes_of_text(self, text) -> np.ndarray:
         if isinstance(text, (bytes, str)):
             return self.matrices.classes_of_text(text)
         return np.asarray(text, dtype=np.int32)
 
+    def bucket_shape(self, n: int, n_chunks: int) -> Tuple[int, int]:
+        """Static (c, k) chunk-grid bucket for a text of length ``n``.
+
+        c is fixed by ``n_chunks``; k rounds up to the next power of two (with
+        a floor of ``min_chunk_len``) so arbitrary lengths land in O(log n)
+        distinct compiled shapes instead of one per length.  The trade: a text
+        just past a bucket edge runs up to ~2x padded cells (identity-PAD
+        steps are materialized), in exchange for never paying a re-jit —
+        lengths 2^p·c+1 … 2^(p+1)·c share one program.
+        """
+        c = max(1, n_chunks)
+        k = _next_pow2(max(self.min_chunk_len, -(-n // c)))
+        return c, k
+
     def pad_chunks(self, classes: np.ndarray, n_chunks: int) -> np.ndarray:
         """Pad with the identity PAD class to equal static chunks (DESIGN §2)."""
         n = len(classes)
         c = max(1, n_chunks)
         k = max(1, -(-n // c))
+        return self._pad_to(classes, c, k)
+
+    def _pad_to(self, classes: np.ndarray, c: int, k: int) -> np.ndarray:
         padded = np.full(c * k, self.tables.pad_class, dtype=np.int32)
-        padded[:n] = classes
+        padded[: len(classes)] = classes
         return padded.reshape(c, k)
 
     # --------------------------------------------------------------- parse
 
     def parse(self, text, n_chunks: int = 8) -> SLPF:
-        classes = self.classes_of_text(text)
-        n = len(classes)
-        if n == 0:
-            col = (self.matrices.I & self.matrices.F)[None, :]
-            return SLPF(table=self.table, columns=col, classes=classes)
-        chunks = self.pad_chunks(classes, n_chunks)
-        col0, cols = _parse_jit(
-            self.tables.N, self.tables.I, self.tables.F, jnp.asarray(chunks)
-        )
-        return self._assemble(col0, cols, classes)
+        """Parse one text through the bucketed batch program (batch slot 1).
+
+        All lengths — including zero — route through the same padded/jitted
+        path; PAD chunks are identity, so the bucket padding is semantics-free.
+        Sharing the batched program means mixing ``parse`` and ``parse_batch``
+        compiles one program per bucket, not two.
+        """
+        return self.parse_batch([text], n_chunks=n_chunks)[0]
+
+    def parse_batch(self, texts: Sequence, n_chunks: int = 8) -> List[SLPF]:
+        """Parse many texts, bucketed by static shape, one device program each.
+
+        Texts are grouped by their (c, k) bucket; each group is padded to a
+        power-of-two number of batch slots (extra rows are all-PAD and
+        discarded), so the set of compiled programs stays small and static —
+        at most one per (bucket, batch-slot) shape, reused across calls.
+        """
+        classes_list = [self.classes_of_text(t) for t in texts]
+        groups: Dict[Tuple[int, int], List[int]] = {}
+        for i, cls in enumerate(classes_list):
+            groups.setdefault(self.bucket_shape(len(cls), n_chunks), []).append(i)
+
+        results: List[Optional[SLPF]] = [None] * len(texts)
+        for (c, k), idxs in sorted(groups.items()):
+            B = _next_pow2(len(idxs))
+            batch = np.full((B, c, k), self.tables.pad_class, dtype=np.int32)
+            for row, i in enumerate(idxs):
+                batch[row] = self._pad_to(classes_list[i], c, k)
+            col0s, colss = self._jit_batched(
+                self.tables.N, self.tables.I, self.tables.F, jnp.asarray(batch)
+            )
+            col0s = np.asarray(col0s)
+            colss = np.asarray(colss)
+            for row, i in enumerate(idxs):
+                results[i] = self._assemble(col0s[row], colss[row], classes_list[i])
+        return results  # type: ignore[return-value]
 
     def _assemble(self, col0, cols, classes) -> SLPF:
         n = len(classes)
@@ -268,7 +286,8 @@ def sharded_parse_step(
 
     ``local_chunks``: (f, k) — this device's f fragments.  Phases:
       reach   local (f chunk products),
-      join    ONE all_gather of (c·f, ℓp, ℓp) summaries + replicated scan,
+      join    ONE all_gather of (c·f, ℓp, ℓp) summaries + the replicated
+              ``core/scan.py`` exclusive scan (shared with the engine),
       build&merge local, emitting packed columns.
     Returns (col0 packed — valid on global chunk 0's device, cols (f, k, W)).
     """
@@ -276,12 +295,9 @@ def sharded_parse_step(
     gathered = jax.lax.all_gather(P_local, tuple(axis_names), axis=0, tiled=False)
     cf = P_local.shape[0]
     P_all = gathered.reshape((-1,) + P_local.shape[1:])              # (c·f, ℓp, ℓp)
-    Jf_all, Jb_all = _entries_from_products(P_all, I, F)
+    Jf_all, Jb_all = join_entries(P_all, I, F)
 
-    idx = jnp.int32(0)
-    for name in axis_names:
-        idx = idx * jax.lax.axis_size(name) + jax.lax.axis_index(name)
-    sl = idx * cf
+    sl = linear_index(axis_names) * cf
     Jf = jax.lax.dynamic_slice_in_dim(Jf_all, sl, cf, 0)
     Jb = jax.lax.dynamic_slice_in_dim(Jb_all, sl, cf, 0)
 
@@ -301,22 +317,27 @@ def make_sharded_parser(tables: EngineTables, mesh, axis_names: Sequence[str], f
     """
     from jax.sharding import NamedSharding, PartitionSpec as P
 
+    if hasattr(jax, "shard_map"):  # jax ≥ 0.6
+        _shard_map = functools.partial(jax.shard_map, check_vma=False)
+    else:  # older jax: experimental namespace, check_rep spelling
+        from jax.experimental.shard_map import shard_map as _esm
+
+        _shard_map = functools.partial(_esm, check_rep=False)
+
     spec_in = P(tuple(axis_names))
     body = functools.partial(sharded_parse_step, axis_names=tuple(axis_names))
 
     @functools.partial(
-        jax.shard_map,
+        _shard_map,
         mesh=mesh,
         in_specs=(P(), P(), P(), spec_in),
         out_specs=(P(), spec_in),
-        check_vma=False,  # scan carries start device-invariant, become varying
+        # non-default check flag: scan carries start device-invariant, become varying
     )
     def program(N, I, F, chunks):
         col0, cols = body(N, I, F, chunks)
         # col0 from every device; keep chunk-0's via psum of masked values.
-        idx = jnp.int32(0)
-        for name in axis_names:
-            idx = idx * jax.lax.axis_size(name) + jax.lax.axis_index(name)
+        idx = linear_index(axis_names)
         col0 = jnp.where(idx == 0, col0, jnp.zeros_like(col0))
         col0 = jax.lax.psum(col0, tuple(axis_names))
         return col0, cols

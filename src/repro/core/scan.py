@@ -81,7 +81,7 @@ def sharded_exclusive_entries(
     """
     gathered = jax.tree.map(lambda x: _all_gather_multi(x, axis_names), local_summary)
     entries = exclusive_entries(combine, act, gathered, init)
-    idx = _linear_index(axis_names)
+    idx = linear_index(axis_names)
     return jax.tree.map(lambda e: jax.lax.dynamic_index_in_dim(e, idx, 0, False), entries)
 
 
@@ -93,10 +93,18 @@ def _all_gather_multi(x: jnp.ndarray, axis_names: Sequence[str]) -> jnp.ndarray:
     return g
 
 
-def _linear_index(axis_names: Sequence[str]) -> jnp.ndarray:
+def axis_size(name: str):
+    """``jax.lax.axis_size`` with a fallback for older jax (psum of 1)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(name)
+    return jax.lax.psum(1, name)
+
+
+def linear_index(axis_names: Sequence[str]) -> jnp.ndarray:
+    """This device's linear position over possibly-multiple mesh axes."""
     idx = jnp.int32(0)
     for name in axis_names:
-        idx = idx * jax.lax.axis_size(name) + jax.lax.axis_index(name)
+        idx = idx * axis_size(name) + jax.lax.axis_index(name)
     return idx
 
 

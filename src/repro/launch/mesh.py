@@ -13,13 +13,25 @@ from __future__ import annotations
 from typing import Optional, Tuple
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax ≥ 0.5: explicit axis types on mesh construction
+    from jax.sharding import AxisType
+except ImportError:  # older jax: meshes are implicitly Auto
+    AxisType = None
+
+
+def make_mesh_compat(shape, axes, *, devices=None):
+    """``jax.make_mesh`` with Auto axis types across jax versions."""
+    kwargs = {} if devices is None else {"devices": devices}
+    if AxisType is not None:
+        kwargs["axis_types"] = (AxisType.Auto,) * len(axes)
+    return jax.make_mesh(tuple(shape), tuple(axes), **kwargs)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh_compat(shape, axes)
 
 
 def make_host_mesh(shape: Tuple[int, ...] = (1,), axes: Tuple[str, ...] = ("data",)):
@@ -30,7 +42,7 @@ def make_host_mesh(shape: Tuple[int, ...] = (1,), axes: Tuple[str, ...] = ("data
     avail = len(jax.devices())
     if n > avail:
         shape, axes = (avail,), ("data",)
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh_compat(shape, axes)
 
 
 def mesh_chips(mesh) -> int:

@@ -1,0 +1,132 @@
+"""Request-level batched parsing service over the shape-bucketed engine.
+
+The LM side of this repo serves generation through ``serve/scheduler.py``'s
+slot pattern: a fixed set of device-program shapes, host-side request state,
+admission the moment capacity frees.  This module is the same pattern for the
+*parser*: callers submit texts of arbitrary length; the service groups queued
+requests by their static (c, k) chunk bucket, packs up to ``max_batch`` of
+them into one batched device program (extra batch slots ride along as all-PAD
+rows), and drains bucket by bucket.  Because every program shape comes from
+the engine's small bucket set, steady-state serving never recompiles —
+``compile_count`` makes that observable.
+
+Scheduling policy: each ``step`` serves the bucket holding the *oldest*
+queued request (FIFO fairness), batching every same-bucket request behind it
+up to ``max_batch`` — mixed-length traffic aggregates into full batches
+without head-of-line blocking on rare shapes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, List, Optional, Tuple, Union
+
+import numpy as np
+
+from ..core.backend import ParserBackend
+from ..core.engine import ParserEngine
+from ..core.slpf import SLPF
+
+
+@dataclasses.dataclass
+class ParseRequest:
+    rid: int
+    text: Union[bytes, str]
+    # cached at submit so scheduling never re-tokenizes queued texts:
+    classes: Optional[np.ndarray] = None
+    # filled by the service:
+    slpf: Optional[SLPF] = None
+
+    @property
+    def done(self) -> bool:
+        return self.slpf is not None
+
+
+class ParseService:
+    """Bucket-batched request scheduler over ``ParserEngine.parse_batch``."""
+
+    def __init__(
+        self,
+        matrices_or_engine,
+        *,
+        backend: Union[str, ParserBackend, None] = None,
+        max_batch: int = 8,
+        n_chunks: int = 8,
+    ):
+        if isinstance(matrices_or_engine, ParserEngine):
+            if backend is not None:
+                raise ValueError(
+                    "pass backend= only when the service builds the engine; "
+                    "a prebuilt ParserEngine already owns its backend"
+                )
+            self.engine = matrices_or_engine
+        else:
+            self.engine = ParserEngine(
+                matrices_or_engine, backend=backend if backend is not None else "jnp"
+            )
+        self.max_batch = max(1, max_batch)
+        self.n_chunks = n_chunks
+        self._queue: Deque[ParseRequest] = deque()
+        self._done: List[ParseRequest] = []
+        self._next_rid = 0
+        self.batches_run = 0
+
+    # ------------------------------------------------------------- admission
+
+    def submit(self, text: Union[bytes, str]) -> int:
+        """Enqueue a text; returns its request id."""
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queue.append(
+            ParseRequest(rid=rid, text=text, classes=self.engine.classes_of_text(text))
+        )
+        return rid
+
+    def _bucket_of(self, req: ParseRequest) -> Tuple[int, int]:
+        return self.engine.bucket_shape(len(req.classes), self.n_chunks)
+
+    # ---------------------------------------------------------------- serving
+
+    def step(self) -> bool:
+        """Serve one batch (the oldest request's bucket); False when idle."""
+        if not self._queue:
+            return False
+        head_bucket = self._bucket_of(self._queue[0])
+        batch: List[ParseRequest] = []
+        keep: Deque[ParseRequest] = deque()
+        while self._queue and len(batch) < self.max_batch:
+            req = self._queue.popleft()
+            if self._bucket_of(req) == head_bucket:
+                batch.append(req)
+            else:
+                keep.append(req)
+        keep.extend(self._queue)  # untouched tail keeps its order
+        self._queue = keep
+
+        slpfs = self.engine.parse_batch(
+            [req.classes for req in batch], n_chunks=self.n_chunks
+        )
+        for req, slpf in zip(batch, slpfs):
+            req.slpf = slpf
+            self._done.append(req)
+        self.batches_run += 1
+        return True
+
+    def run(self) -> List[ParseRequest]:
+        """Drain the queue; returns finished requests in completion order."""
+        while self.step():
+            pass
+        out, self._done = self._done, []
+        return out
+
+    # ------------------------------------------------------------------ stats
+
+    @property
+    def compile_count(self) -> int:
+        """Distinct device programs compiled by the underlying engine."""
+        return self.engine.compile_count
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)

@@ -8,7 +8,13 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 sys.path.insert(0, str(Path(__file__).parent))          # tests/oracle.py
 sys.path.insert(0, str(Path(__file__).parents[1] / "src"))
 
-from hypothesis import settings
+# hypothesis is an optional test dependency (offline CI images lack it);
+# property-based tests importorskip it individually.
+try:
+    from hypothesis import settings
+except ModuleNotFoundError:
+    settings = None
 
-settings.register_profile("ci", max_examples=25, deadline=None)
-settings.load_profile("ci")
+if settings is not None:
+    settings.register_profile("ci", max_examples=25, deadline=None)
+    settings.load_profile("ci")

@@ -6,7 +6,6 @@ from pathlib import Path
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.engine import EngineTables, ParserEngine
 from repro.core.reference import ParallelArtifacts
@@ -19,9 +18,9 @@ def art():
     return ParallelArtifacts.generate("(a|b|ab)+")
 
 
-@pytest.fixture(scope="module")
-def engine(art):
-    return ParserEngine(art.matrices)
+@pytest.fixture(scope="module", params=["jnp", "pallas"])
+def engine(art, request):
+    return ParserEngine(art.matrices, backend=request.param)
 
 
 @pytest.mark.parametrize("text,c", [
@@ -54,20 +53,25 @@ def test_lane_padding_invariance(art):
         )
 
 
-@given(st.integers(0, 5_000), st.integers(3, 8), st.integers(1, 5))
-@settings(max_examples=20, deadline=None)
-def test_property_engine_equals_serial(seed, size, c):
+def test_property_engine_equals_serial():
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
     from repro.core.numbering import number_regex
     from repro.core.segments import compute_segments
 
-    rng = np.random.Generator(np.random.Philox(seed))
-    ast = random_regex(size, rng)
-    art = ParallelArtifacts.generate(compute_segments(number_regex(ast)))
-    eng = ParserEngine(art.matrices)
-    text = sample_string(ast, rng)[:10]
-    ref = parse_serial_matrix(art.matrices, text)
-    got = eng.parse(text, n_chunks=c)
-    assert np.array_equal(ref.columns, got.columns)
+    @hyp.given(st.integers(0, 5_000), st.integers(3, 8), st.integers(1, 5))
+    @hyp.settings(max_examples=20, deadline=None)
+    def run(seed, size, c):
+        rng = np.random.Generator(np.random.Philox(seed))
+        ast = random_regex(size, rng)
+        art = ParallelArtifacts.generate(compute_segments(number_regex(ast)))
+        eng = ParserEngine(art.matrices)
+        text = sample_string(ast, rng)[:10]
+        ref = parse_serial_matrix(art.matrices, text)
+        got = eng.parse(text, n_chunks=c)
+        assert np.array_equal(ref.columns, got.columns)
+
+    run()
 
 
 @pytest.mark.slow
@@ -83,8 +87,8 @@ from collections import Counter
 from repro.core.reference import ParallelArtifacts
 from repro.core.serial import parse_serial_matrix
 from repro.core.engine import ParserEngine, make_sharded_parser
-mesh = jax.make_mesh((2, 4), ("pod", "data"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_mesh_compat
+mesh = make_mesh_compat((2, 4), ("pod", "data"))
 art = ParallelArtifacts.generate("(a|b|ab)+")
 eng = ParserEngine(art.matrices)
 prog = make_sharded_parser(eng.tables, mesh, ("pod", "data"))

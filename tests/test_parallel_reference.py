@@ -2,7 +2,6 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.reference import (
     ParallelArtifacts,
@@ -70,23 +69,28 @@ def test_split_chunks_partitions():
         assert max(sizes) - min(sizes) <= 1  # near-equal split
 
 
-@given(st.integers(0, 5_000), st.integers(3, 8), st.integers(1, 6))
-@settings(max_examples=25, deadline=None)
-def test_property_parallel_equals_serial(seed, size, c):
+def test_property_parallel_equals_serial():
     """Random REs × random texts × random chunk counts: identical SLPFs."""
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
     from repro.core.numbering import number_regex
     from repro.core.segments import compute_segments
 
-    rng = np.random.Generator(np.random.Philox(seed))
-    ast = random_regex(size, rng)
-    art = ParallelArtifacts.generate(compute_segments(number_regex(ast)))
-    for _ in range(2):
-        text = sample_string(ast, rng)[:10]
-        ref = parse_serial_matrix(art.matrices, text)
-        got = parse_parallel_reference(art, text, c=c, fused=bool(seed % 2))
+    @hyp.given(st.integers(0, 5_000), st.integers(3, 8), st.integers(1, 6))
+    @hyp.settings(max_examples=25, deadline=None)
+    def run(seed, size, c):
+        rng = np.random.Generator(np.random.Philox(seed))
+        ast = random_regex(size, rng)
+        art = ParallelArtifacts.generate(compute_segments(number_regex(ast)))
+        for _ in range(2):
+            text = sample_string(ast, rng)[:10]
+            ref = parse_serial_matrix(art.matrices, text)
+            got = parse_parallel_reference(art, text, c=c, fused=bool(seed % 2))
+            assert np.array_equal(ref.columns, got.columns)
+        # also one invalid-ish random text
+        bad = bytes(rng.integers(97, 123, size=6).astype(np.uint8))
+        ref = parse_serial_matrix(art.matrices, bad)
+        got = parse_parallel_reference(art, bad, c=c)
         assert np.array_equal(ref.columns, got.columns)
-    # also one invalid-ish random text
-    bad = bytes(rng.integers(97, 123, size=6).astype(np.uint8))
-    ref = parse_serial_matrix(art.matrices, bad)
-    got = parse_parallel_reference(art, bad, c=c)
-    assert np.array_equal(ref.columns, got.columns)
+
+    run()

@@ -1,0 +1,74 @@
+"""Request-level batched parse service (serve/parse_service.py)."""
+
+import numpy as np
+import pytest
+
+from repro.core.engine import ParserEngine
+from repro.core.reference import ParallelArtifacts
+from repro.core.serial import parse_serial_matrix
+from repro.serve.parse_service import ParseRequest, ParseService
+
+
+@pytest.fixture(scope="module")
+def art():
+    return ParallelArtifacts.generate("(a|b|ab)+")
+
+
+def test_service_serves_mixed_lengths_exactly(art):
+    svc = ParseService(art.matrices, max_batch=4, n_chunks=4)
+    texts = ["abab", "", "b", "a" * 23, "ab" * 40, "ba", "ababab"]
+    rids = [svc.submit(t) for t in texts]
+    done = svc.run()
+    assert sorted(r.rid for r in done) == sorted(rids)
+    by_rid = {r.rid: r for r in done}
+    for rid, text in zip(rids, texts):
+        ref = parse_serial_matrix(art.matrices, text)
+        assert np.array_equal(by_rid[rid].slpf.columns, ref.columns), text
+
+
+def test_service_batches_same_bucket_requests(art):
+    svc = ParseService(art.matrices, max_batch=8, n_chunks=4)
+    for _ in range(8):
+        svc.submit("abab")                # all land in one (c, k) bucket
+    svc.run()
+    assert svc.batches_run == 1          # one device batch, not 8
+
+
+def test_service_respects_max_batch_and_fifo(art):
+    svc = ParseService(art.matrices, max_batch=2, n_chunks=4)
+    for i in range(5):
+        svc.submit("ab" * (i + 1))       # lengths 2..10 — same k=8 bucket
+    done = svc.run()
+    assert svc.batches_run == 3          # ceil(5 / 2)
+    assert [r.rid for r in done] == [0, 1, 2, 3, 4]   # FIFO completion
+
+
+def test_service_steady_state_never_recompiles(art):
+    svc = ParseService(art.matrices, max_batch=4, n_chunks=4)
+    for t in ["abab", "ba", "ababab", "b"]:
+        svc.submit(t)
+    svc.run()
+    warm = svc.compile_count
+    for _ in range(3):
+        for t in ["ab", "abba" * 2, "a" * 20, "b"]:
+            svc.submit(t)
+        svc.run()
+    assert svc.compile_count == warm     # same buckets → same programs
+
+
+def test_service_rejects_backend_with_prebuilt_engine(art):
+    """backend= must not be silently ignored when an engine is passed."""
+    eng = ParserEngine(art.matrices)
+    with pytest.raises(ValueError, match="prebuilt ParserEngine"):
+        ParseService(eng, backend="pallas")
+
+
+def test_service_accepts_prebuilt_engine(art):
+    eng = ParserEngine(art.matrices, backend="pallas")
+    svc = ParseService(eng, max_batch=2, n_chunks=2)
+    assert svc.engine is eng
+    rid = svc.submit("abab")
+    (req,) = svc.run()
+    assert req.rid == rid and req.done
+    ref = parse_serial_matrix(art.matrices, "abab")
+    assert np.array_equal(req.slpf.columns, ref.columns)

@@ -4,7 +4,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.scan import (
     associative_prefix,
@@ -28,20 +27,26 @@ def _serial_fold(a, b, init):
     return np.stack(outs)
 
 
-@given(st.integers(0, 1000), st.sampled_from([1, 2, 3, 4, 6, 12]))
-@settings(max_examples=25, deadline=None)
-def test_chunked_scan_equals_fold(seed, n_chunks):
-    rng = np.random.RandomState(seed)
-    n = 24
-    a = jnp.asarray(rng.uniform(0.5, 1.0, n).astype(np.float32))
-    b = jnp.asarray(rng.randn(n).astype(np.float32))
-    init = jnp.float32(rng.randn())
-    got = chunked_scan(
-        AFFINE_COMBINE, AFFINE_APPLY, (a, b), init,
-        (jnp.float32(1.0), jnp.float32(0.0)), n_chunks,
-    )
-    ref = _serial_fold(np.asarray(a), np.asarray(b), float(init))
-    np.testing.assert_allclose(np.asarray(got), ref, rtol=2e-5, atol=1e-5)
+def test_chunked_scan_equals_fold():
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.given(st.integers(0, 1000), st.sampled_from([1, 2, 3, 4, 6, 12]))
+    @hyp.settings(max_examples=25, deadline=None)
+    def run(seed, n_chunks):
+        rng = np.random.RandomState(seed)
+        n = 24
+        a = jnp.asarray(rng.uniform(0.5, 1.0, n).astype(np.float32))
+        b = jnp.asarray(rng.randn(n).astype(np.float32))
+        init = jnp.float32(rng.randn())
+        got = chunked_scan(
+            AFFINE_COMBINE, AFFINE_APPLY, (a, b), init,
+            (jnp.float32(1.0), jnp.float32(0.0)), n_chunks,
+        )
+        ref = _serial_fold(np.asarray(a), np.asarray(b), float(init))
+        np.testing.assert_allclose(np.asarray(got), ref, rtol=2e-5, atol=1e-5)
+
+    run()
 
 
 def test_associative_prefix_matmul():

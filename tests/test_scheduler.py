@@ -14,7 +14,18 @@ from repro.serve.scheduler import ContinuousBatcher, Request
 
 @pytest.fixture(scope="module")
 def setup():
+    import dataclasses
+
+    # float32: slot-reuse equality checks are exact-token comparisons, and a
+    # reused slot decodes at a shifted absolute position — RoPE values rounded
+    # to bf16 differ per position by enough (~0.2 in logits) to flip near-tie
+    # argmaxes even with perfect isolation.  In f32 the positional noise is
+    # ~1e-6 while a genuine K/V or SSM leak would still shift logits by O(0.1),
+    # so the test stays discriminative for what it actually asserts.
     cfg = get_smoke("tinyllama-1.1b")
+    cfg = dataclasses.replace(
+        cfg, dtype="float32", param_dtype="float32", attn_p_dtype="float32"
+    )
     params = init_params(cfg, jax.random.PRNGKey(0))
     return cfg, params
 
@@ -68,5 +79,13 @@ def test_constrained_requests_in_batch(setup):
     assert len(done) == 4
     for r in done:
         s = "".join(chr(c) for c in r.output)
-        # prompt 'a' + generated must lie in L((ab|a)*c) or be a valid prefix
-        assert re.fullmatch("(ab|a)*c", "a" + s) or not r.output.size, s
+        # The DFA mask guarantees every emitted token follows a live transition,
+        # so prompt 'a' + generated is always a valid DFA path (language prefix);
+        # if the request finished before max_new (EOS is only unmasked in final
+        # states) the output must be a full member of L((ab|a)*c).
+        state = tdfa.initial
+        for tok in [ord("a")] + [int(t) for t in r.output]:
+            state = int(tdfa.delta[state, tok])
+            assert state >= 0, ("dead-state transition", s)
+        if r.output.size < r.max_new:
+            assert re.fullmatch("(ab|a)*c", "a" + s), s

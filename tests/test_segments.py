@@ -2,7 +2,6 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from oracle import enumerate_lsts, lst_to_segments
 from repro.core.numbering import number_regex
@@ -63,18 +62,24 @@ def test_segments_cover_oracle_factors(pat, texts):
                 assert seg in known, (pat, text, seg)
 
 
-@given(st.integers(0, 10_000), st.integers(3, 9))
-@settings(max_examples=30, deadline=None)
-def test_random_re_segments_cover_sampled_strings(seed, size):
+def test_random_re_segments_cover_sampled_strings():
     """Property: for random REs, sampled valid strings' LST factors are all
     computed segments (Fig. 5 completeness)."""
-    rng = np.random.Generator(np.random.Philox(seed))
-    ast = random_regex(size, rng)
-    numbered = number_regex(ast)
-    t = compute_segments(numbered)
-    known = set(t.segs)
-    for _ in range(3):
-        s = sample_string(ast, rng)[:8]
-        for lst in enumerate_lsts(numbered, s, limit=50):
-            for seg in lst_to_segments(numbered, lst):
-                assert seg in known
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.given(st.integers(0, 10_000), st.integers(3, 9))
+    @hyp.settings(max_examples=30, deadline=None)
+    def run(seed, size):
+        rng = np.random.Generator(np.random.Philox(seed))
+        ast = random_regex(size, rng)
+        numbered = number_regex(ast)
+        t = compute_segments(numbered)
+        known = set(t.segs)
+        for _ in range(3):
+            s = sample_string(ast, rng)[:8]
+            for lst in enumerate_lsts(numbered, s, limit=50):
+                for seg in lst_to_segments(numbered, lst):
+                    assert seg in known
+
+    run()

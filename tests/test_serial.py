@@ -2,7 +2,6 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from oracle import enumerate_lsts, render_lst
 from repro.core.matrices import build_matrices

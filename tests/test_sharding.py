@@ -16,7 +16,10 @@ def mesh():
     # logical 16x16 structure on 1 real device: use abstract mesh
     from jax.sharding import AbstractMesh
 
-    return AbstractMesh((16, 16), ("data", "model"))
+    try:
+        return AbstractMesh((16, 16), ("data", "model"))
+    except TypeError:  # jax ≤ 0.4: AbstractMesh(((name, size), ...))
+        return AbstractMesh((("data", 16), ("model", 16)))
 
 
 def test_resolve_basic(mesh):

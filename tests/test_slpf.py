@@ -2,7 +2,6 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.matrices import pack_bits, unpack_bits
 from repro.core.serial import SerialParser
@@ -76,16 +75,22 @@ def test_pack_roundtrip(parser):
     assert np.array_equal(s.columns, s2.columns)
 
 
-@given(st.binary(min_size=0, max_size=64))
-@settings(max_examples=30, deadline=None)
-def test_pack_bits_roundtrip_property(data):
-    arr = np.frombuffer(data, dtype=np.uint8).astype(bool)
-    n = len(arr)
-    if n == 0:
-        return
-    packed = pack_bits(arr[None, :], axis=-1)
-    un = unpack_bits(packed, n, axis=-1)
-    assert np.array_equal(un[0], arr)
+def test_pack_bits_roundtrip_property():
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.given(st.binary(min_size=0, max_size=64))
+    @hyp.settings(max_examples=30, deadline=None)
+    def run(data):
+        arr = np.frombuffer(data, dtype=np.uint8).astype(bool)
+        n = len(arr)
+        if n == 0:
+            return
+        packed = pack_bits(arr[None, :], axis=-1)
+        un = unpack_bits(packed, n, axis=-1)
+        assert np.array_equal(un[0], arr)
+
+    run()
 
 
 def test_compression_roundtrip(parser):
