@@ -11,6 +11,9 @@ machine.  Mapping to the paper:
   speedup         Fig.16/18— two-phase work model + measured phase ratio
   batched_throughput      — texts/sec of the bucketed batch front-end,
                             jnp vs pallas-interpret, batch 1/8/64
+  streaming_append        — amortized cost per appended byte of the
+                            StreamingParser prefix cache vs a cold full
+                            re-parse per append (``--smoke`` = CI-tiny sizes)
   recognizer      Fig. 16r — recognition cost (reach+join only)
   memory          App. C   — SLPF bytes/char, packed and compressed
   engine_roofline §Roofline— per-cell terms (from the dry-run JSON)
@@ -183,6 +186,76 @@ def bench_batched_throughput(rows, quick):
             ))
 
 
+def bench_streaming_append(rows, quick, smoke=False):
+    """Streaming append cost (core/stream.py) vs cold full re-parse.
+
+    Streams a text in fixed-size appends and reports, at geometric prefix
+    checkpoints, the per-byte append cost inside that window — flat across
+    checkpoints ⇒ the amortized incremental work is sublinear in prefix
+    length (the prefix cache only re-reaches the appended piece + an
+    O(log n) join) — against the cost a naive server pays to re-parse the
+    whole prefix on every append.  A warm pass runs first so the numbers
+    exclude one-time bucket compiles (``compiles`` column shows the total).
+    """
+    from benchmarks.benchmark_res import BIGDATA_RE, make_text_exact
+    from repro.core.engine import ParserEngine
+    from repro.core.reference import ParallelArtifacts
+    from repro.core.stream import StreamingParser
+
+    art = ParallelArtifacts.generate(BIGDATA_RE)
+    n_target = 1_500 if smoke else (12_000 if quick else 400_000)
+    step = 50 if smoke else (100 if quick else 1_000)
+    text = make_text_exact("BIGDATA", n_target, seed=5)
+    n = len(text)
+    eng = ParserEngine(art.matrices)
+    checkpoints = sorted({n // 4, n // 2, n})
+
+    def stream_pass():
+        sp = StreamingParser(eng)
+        total, done, nxt, marks = 0.0, 0, 0, []
+        for lo in range(0, n, step):
+            piece = text[lo : lo + step]
+            t0 = time.perf_counter()
+            sp.append(piece)
+            total += time.perf_counter() - t0
+            done += len(piece)
+            while nxt < len(checkpoints) and done >= checkpoints[nxt]:
+                marks.append((done, total))
+                nxt += 1
+        return sp, marks
+
+    stream_pass()                        # warm: traces every bucketed shape
+    sp, marks = stream_pass()
+
+    prev_n, prev_t = 0, 0.0
+    for cp_n, cp_t in marks:
+        win_bytes = max(cp_n - prev_n, 1)
+        win_per_byte = (cp_t - prev_t) / win_bytes
+        rows.append((f"streaming.append_us_per_byte.n{cp_n}", cp_n,
+                     round(win_per_byte * 1e6, 3),
+                     "flat across checkpoints => sublinear in prefix"))
+        prefix = text[:cp_n]
+        eng.parse(prefix)                # warm this parse bucket
+        t_cold = _time(lambda: eng.parse(prefix), reps=2)
+        per_append = (cp_t - prev_t) / max(win_bytes / step, 1)
+        rows.append((f"streaming.reparse_speedup.n{cp_n}", cp_n,
+                     round(t_cold / max(per_append, 1e-9), 1),
+                     f"cold reparse {t_cold*1e3:.1f}ms vs "
+                     f"{per_append*1e6:.0f}us/append"))
+        prev_n, prev_t = cp_n, cp_t
+    rows.append(("streaming.amortized_us_per_byte", n,
+                 round(marks[-1][1] / n * 1e6, 3),
+                 f"{step}B appends; compiles={eng.compile_count}; "
+                 f"{sp.n_sealed_chunks} sealed chunks"))
+    ok = np.array_equal(sp.current_slpf().pack(), eng.parse(text).pack())
+    rows.append(("streaming.bit_identical", n, int(ok),
+                 "stream SLPF == cold parse (must be 1)"))
+    if not ok:
+        raise SystemExit(
+            "streaming_append: stream SLPF diverged from cold parse"
+        )  # make the CI smoke invocation a real gate, not a printout
+
+
 def bench_recognizer(rows, quick):
     from benchmarks.benchmark_res import BIGDATA_RE, make_text_exact
     from repro.core.reference import ParallelArtifacts
@@ -235,8 +308,12 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", default=True)
     ap.add_argument("--full", dest="quick", action="store_false")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-tiny sizes (implies --quick)")
     ap.add_argument("--only", default=None)
     args = ap.parse_args(argv)
+    if args.smoke:
+        args.quick = True
 
     rows = []
     benches = {
@@ -246,6 +323,9 @@ def main(argv=None) -> None:
         "parse_times": lambda: bench_parse_times(rows, args.quick),
         "speedup": lambda: bench_speedup(rows, args.quick),
         "batched_throughput": lambda: bench_batched_throughput(rows, args.quick),
+        "streaming_append": lambda: bench_streaming_append(
+            rows, args.quick, args.smoke
+        ),
         "recognizer": lambda: bench_recognizer(rows, args.quick),
         "memory": lambda: bench_memory(rows, args.quick),
         "engine_roofline": lambda: bench_engine_roofline(rows),

@@ -13,5 +13,11 @@ if [[ "${1:-}" == "--fast" ]]; then
     PYTEST_ARGS+=(-m "not slow")
 fi
 
+# tier-1 suite (includes the streaming modules tests/test_stream.py and
+# tests/test_stream_service.py — every incremental state vs the oracles)
 python -m pytest "${PYTEST_ARGS[@]}"
+
+# streaming smoke gate: amortized append cost + bit-identity vs cold parse
+python -m benchmarks.run --only streaming_append --smoke
+
 python -m benchmarks.run --quick --only tab5

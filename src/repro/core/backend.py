@@ -149,6 +149,16 @@ class ParserBackend:
         """(c, k) chunks → (c, ℓp, ℓp) chunk products."""
         raise NotImplementedError
 
+    def compose(self, later: jnp.ndarray, earlier: jnp.ndarray) -> jnp.ndarray:
+        """Monoid composition of two chunk products: ``later ⊗ earlier``.
+
+        The single-step form of the reach fold — the streaming prefix cache
+        extends its tail product with this instead of re-folding the whole
+        tail.  Backends with a different product representation (bit-packed
+        uint32 words, …) override it together with ``reach``.
+        """
+        return semiring_matmul(later, earlier)
+
     def join(
         self, P: jnp.ndarray, I: jnp.ndarray, F: jnp.ndarray
     ) -> Tuple[jnp.ndarray, jnp.ndarray]:

@@ -31,6 +31,21 @@ The runtime is organised in three layers (bottom-up):
                    ``serve/parse_service.py`` (slot pattern of the LM
                    scheduler).
 
+  phase programs   ``ParserEngine.phases`` — the same three phases as
+                   separately-jitted programs whose boundaries (the
+                   (c, ℓp, ℓp) chunk products P_i and the join entries) are
+                   first-class, cacheable arrays instead of fused
+                   intermediates.  This is the seam the streaming layer
+                   caches across calls.
+
+  stream layer     ``core/stream.py``'s ``StreamingParser`` — a persistent
+                   prefix cache of sealed chunk products + a mutable tail;
+                   ``append`` re-runs only the appended piece's reach and the
+                   O(log c) join over cached summaries.  Session-level
+                   serving lives in ``serve/stream_service.py`` (bucket-
+                   batched tail execution across sessions, bytes-budget
+                   eviction).
+
 Mapping from the paper's phases (all validated against ``core/reference.py``,
 the paper-faithful oracle):
 
@@ -58,7 +73,7 @@ from __future__ import annotations
 
 import functools
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -125,22 +140,80 @@ class EngineTables:
 # ------------------------------------------------------------- parse core
 
 
+def join_with_col0(backend: ParserBackend, P, I, F):
+    """Join phase over stacked products, plus the packed text-start column.
+
+    C_0 = I ∧ β_0 with β_0 = P_0ᵀ Ĵ_0 — the backward state at text start,
+    recovered from the reach products (no extra backward pass).
+    """
+    Jf, Jb = backend.join(P, I, F)                       # (c, ℓp) each
+    col0 = I * semiring_matvec(P[0].T, Jb[0])
+    return Jf, Jb, pack_columns_u32(col0)
+
+
 def make_parse_core(backend: ParserBackend):
     """Single-text three-phase program over one (c, k) chunk grid.
 
     Returns ``core(N, I, F, chunks) -> (packed col0 (W,), packed cols (c,k,W))``.
+    This is the *fused* composition of the phase bodies; ``PhasePrograms``
+    exposes the identical phases as separate programs with cacheable
+    boundaries.
     """
 
     def parse_core(N, I, F, chunks):
         P = backend.reach(N, chunks)                     # (c, ℓp, ℓp)
-        Jf, Jb = backend.join(P, I, F)                   # (c, ℓp) each
+        Jf, Jb, col0p = join_with_col0(backend, P, I, F)
         M = backend.build_merge(N, chunks, Jf, Jb)       # (c, k, ℓp)
-        # C_0 = I ∧ β_0 with β_0 = P_0ᵀ Ĵ_0 — the backward state at text start,
-        # recovered from the reach products (no extra backward pass).
-        col0 = I * semiring_matvec(P[0].T, Jb[0])
-        return pack_columns_u32(col0), pack_columns_u32(M)
+        return col0p, pack_columns_u32(M)
 
     return parse_core
+
+
+class PhasePrograms:
+    """The three phases as separately-jitted, shape-bucketed device programs.
+
+    Where ``make_parse_core`` fuses reach → join → build&merge into one
+    program (best for cold batch parsing), these programs expose every phase
+    boundary as a first-class array contract:
+
+      reach        (N, (c, k) chunks)        → (c, ℓp, ℓp) chunk products P_i
+      compose      (later P, earlier P)      → later ⊗ earlier (one product)
+      join         (P (c, ℓp, ℓp), I, F)     → (Jf, Jb, packed C_0)
+      build_merge  (N, chunks, Jf, Jb)       → (c, k, W) packed clean columns
+
+    The products and entries crossing these seams are plain device arrays a
+    caller may cache, slice, restack, and feed back in — the contract the
+    streaming prefix cache (``core/stream.py``) is built on, and the same
+    seam sharded-batched execution and bit-packed backends plug into.  Each
+    program re-traces once per input shape, so callers that bucket their
+    shapes (power-of-two chunk lengths / product counts) keep the compiled
+    set bounded exactly like the fused path.
+    """
+
+    def __init__(self, backend: ParserBackend, on_trace: Optional[Callable] = None):
+        notify = on_trace or (lambda: None)
+
+        def _reach(N, chunks):
+            notify()
+            return backend.reach(N, chunks)
+
+        def _compose(later, earlier):
+            notify()
+            return backend.compose(later, earlier)
+
+        def _join(P, I, F):
+            notify()
+            return join_with_col0(backend, P, I, F)
+
+        def _build_merge(N, chunks, Jf, Jb):
+            notify()
+            return pack_columns_u32(backend.build_merge(N, chunks, Jf, Jb))
+
+        self.backend = backend
+        self.reach = jax.jit(_reach)
+        self.compose = jax.jit(_compose)
+        self.join = jax.jit(_join)
+        self.build_merge = jax.jit(_build_merge)
 
 
 def _next_pow2(x: int) -> int:
@@ -173,6 +246,7 @@ class ParserEngine:
         self.min_chunk_len = max(1, min_chunk_len)
 
         self._compile_count = 0
+        self._phases: Optional[PhasePrograms] = None
 
         def counted_core(N, I, F, chunks, _core=make_parse_core(self.backend)):
             # Python side effect at trace time: counts compiled programs.
@@ -187,6 +261,20 @@ class ParserEngine:
     def compile_count(self) -> int:
         """Number of distinct programs traced so far (one per shape bucket)."""
         return self._compile_count
+
+    @property
+    def phases(self) -> PhasePrograms:
+        """Separately-jitted phase programs over this engine's backend.
+
+        Built lazily (the fused batch path never pays for them); traces are
+        counted into ``compile_count`` like every other engine program.
+        """
+        if self._phases is None:
+            def bump():
+                self._compile_count += 1
+
+            self._phases = PhasePrograms(self.backend, on_trace=bump)
+        return self._phases
 
     def classes_of_text(self, text) -> np.ndarray:
         if isinstance(text, (bytes, str)):
@@ -270,6 +358,25 @@ class ParserEngine:
 
     def count_accepting(self, text, n_chunks: int = 8) -> int:
         return self.parse(text, n_chunks).count_trees()
+
+
+def resolve_engine(
+    matrices_or_engine, backend: Union[str, ParserBackend, None]
+) -> ParserEngine:
+    """Shared constructor contract of everything layered on the engine
+    (ParseService, StreamingParser, StreamService): accept matrices / a
+    segment table and build an engine, or accept a prebuilt ParserEngine —
+    in which case ``backend=`` must not also be passed."""
+    if isinstance(matrices_or_engine, ParserEngine):
+        if backend is not None:
+            raise ValueError(
+                "pass backend= only when building the engine here; "
+                "a prebuilt ParserEngine already owns its backend"
+            )
+        return matrices_or_engine
+    return ParserEngine(
+        matrices_or_engine, backend=backend if backend is not None else "jnp"
+    )
 
 
 # ----------------------------------------------------- sharded (multi-pod)

@@ -1,0 +1,365 @@
+"""Streaming incremental parse: a persistent chunk-product prefix cache.
+
+The batch engine (``core/engine.py``) re-pays the full reach pass over the
+whole text for every parse.  But the paper derives *all* cross-chunk
+structure from the per-chunk summaries ``P_i`` (Eq. 6) and the log-depth
+join (Eq. 7) — and those summaries form a monoid that composes
+incrementally (the Simultaneous-Finite-Automata view, PAPERS.md):
+
+    P(prefix · piece) = P(piece) ⊗ P(prefix)
+
+so appending text only requires the *new* piece's reach product plus a
+re-join over the cached summaries.  ``StreamingParser`` keeps exactly that
+state between calls, built on the engine's separately-jitted phase programs
+(``ParserEngine.phases``):
+
+  sealed chunks   immutable prefix chunks with their cached products P_i —
+                  the persistent prefix cache; never recomputed by append.
+  mutable tail    the unsealed suffix; its running product is *extended*
+                  (one ``compose`` per appended piece), never re-folded.
+  join cache      forward/backward entries over [sealed…, tail] from
+                  ``core/scan.py``'s ``exclusive_entries`` — O(c) product
+                  compositions per refresh, c = O(log n) chunks.
+
+Geometric chunk-sealing: the tail seals when it reaches ``next_seal_len``,
+which then doubles — so a prefix of length n holds O(log n) sealed chunks,
+every sealed length is first_seal_len·2^i, and every device shape (reach
+chunk length, product-stack height, build chunk length) lands in a
+power-of-two bucket.  The compiled program set stays bounded exactly like
+``ParserEngine.bucket_shape``'s buckets: appending never re-jits.
+
+The product stack fed to the join is padded with identity products to the
+next power of two **plus at least one identity** — identities are no-ops
+for both scan directions, and the guaranteed pad slot makes the forward
+state *after* the last real chunk available as ``Jf[c_real]`` (the
+streaming acceptance state) without an extra inclusive scan.
+
+``current_slpf()`` materializes the full clean SLPF of the prefix: one
+join over the cached products plus build&merge per chunk — no reach work
+for sealed chunks.  Output is bit-identical to a cold ``ParserEngine.parse``
+of the same prefix (the clean SLPF is unique), validated against
+``core/reference.py`` in tests.
+
+``snapshot()``/``restore()`` capture/reinstate the whole stream state in
+O(1) device work (products are immutable jax arrays; only class buffers are
+copied).  ``drop_cache()`` releases the device arrays (serving-layer
+eviction); the classes are retained host-side and the cache is rebuilt
+transparently on the next touch.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Tuple, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+from .backend import ParserBackend
+from .engine import _next_pow2, resolve_engine
+from .matrices import unpack_bits
+from .slpf import SLPF
+
+
+@dataclass(frozen=True)
+class StreamSnapshot:
+    """Immutable capture of a stream's full state.
+
+    Products are jax arrays (immutable — shared by reference); class buffers
+    are copied numpy arrays.  A snapshot of an evicted (cold) parser carries
+    ``sealed_products=None`` — restoring it reinstates the cold state and the
+    cache rebuilds on the next touch, so ``snapshot`` is O(1) device work in
+    every state.  ``restore`` accepts snapshots across ``StreamingParser``
+    instances that share an engine.
+    """
+
+    sealed_classes: Tuple[np.ndarray, ...]
+    sealed_products: Optional[Tuple[jnp.ndarray, ...]]
+    tail_classes: np.ndarray
+    tail_product: Optional[jnp.ndarray]
+    next_seal_len: int
+
+
+class StreamingParser:
+    """Incremental parser over a persistent chunk-product prefix cache."""
+
+    def __init__(
+        self,
+        matrices_or_engine,
+        *,
+        backend: Union[str, ParserBackend, None] = None,
+        first_seal_len: int = 8,
+        max_seal_len: Optional[int] = None,
+    ):
+        self.engine = resolve_engine(matrices_or_engine, backend)
+        self.first_seal_len = _next_pow2(max(1, first_seal_len))
+        if max_seal_len is None:
+            self.max_seal_len = None
+        else:
+            # floor to a power of two: the cap is a promise, never exceeded
+            floored = 1 << (max(1, max_seal_len).bit_length() - 1)
+            self.max_seal_len = max(self.first_seal_len, floored)
+        t = self.engine.tables
+        self._eye = jnp.eye(t.ell_pad, dtype=t.N.dtype)
+
+        # prefix cache -----------------------------------------------------
+        self._sealed_classes: List[np.ndarray] = []
+        self._sealed_products: List[jnp.ndarray] = []   # dropped when cold
+        self._tail_pieces: List[np.ndarray] = []
+        self._tail_len = 0
+        self._tail_product: jnp.ndarray = self._eye
+        self._next_seal = self.first_seal_len
+        self._cold = False            # True ⇔ products evicted, classes kept
+        # join cache over [sealed…, tail]: (Jf, Jb, packed col0, c_real)
+        self._join: Optional[Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, int]] = None
+
+        # counters ---------------------------------------------------------
+        self.appended_bytes = 0
+        self.rebuilds = 0             # cold-cache reconstructions paid
+
+    # ------------------------------------------------------------- geometry
+
+    @property
+    def n(self) -> int:
+        """Current prefix length (characters appended so far)."""
+        return sum(len(s) for s in self._sealed_classes) + self._tail_len
+
+    @property
+    def n_sealed_chunks(self) -> int:
+        return len(self._sealed_classes)
+
+    def tail_room(self) -> int:
+        """Characters the tail accepts before the next seal boundary."""
+        return self._next_seal - self._tail_len
+
+    @property
+    def compile_count(self) -> int:
+        return self.engine.compile_count
+
+    @property
+    def cache_nbytes(self) -> int:
+        """Device bytes held by the prefix cache (products + join entries).
+
+        An empty tail holds the shared identity matrix, not cache — counting
+        it would report phantom bytes eviction cannot free."""
+        if self._cold:
+            return 0
+        total = sum(int(p.size) * p.dtype.itemsize for p in self._sealed_products)
+        if self._tail_len:
+            total += int(self._tail_product.size) * self._tail_product.dtype.itemsize
+        if self._join is not None:
+            Jf, Jb, col0p, _ = self._join
+            total += sum(int(a.size) * a.dtype.itemsize for a in (Jf, Jb, col0p))
+        return total
+
+    # --------------------------------------------------------------- append
+
+    def append(self, text) -> int:
+        """Extend the stream; returns the number of characters appended.
+
+        Incremental cost: one bucketed reach over each appended piece (a
+        piece never crosses a seal boundary — large appends split into
+        O(log) geometric pieces), one ``compose`` per piece to extend the
+        tail product, and one exclusive join over the O(log n) cached
+        summaries — eager on purpose, so ``accepted`` is O(1) after every
+        append (the batched service path goes through ``absorb_product``
+        instead, which defers the join to first query).  No sealed product
+        is ever recomputed.
+        """
+        classes = self.engine.classes_of_text(text)
+        if len(classes) == 0:
+            return 0
+        self._ensure_cache()
+        i = 0
+        while i < len(classes):
+            piece = classes[i : i + self.tail_room()]
+            i += len(piece)
+            self.absorb_product(piece, self._reach_piece(piece))
+        self._refresh_join()
+        return len(classes)
+
+    def _reach_piece(self, piece: np.ndarray) -> jnp.ndarray:
+        """Reach product of one piece via the bucketed phase program."""
+        k = self._bucket_len(len(piece))
+        chunk = self.engine._pad_to(piece, 1, k)
+        return self.engine.phases.reach(self.engine.tables.N, jnp.asarray(chunk))[0]
+
+    def _bucket_len(self, m: int) -> int:
+        return _next_pow2(max(self.engine.min_chunk_len, m))
+
+    def absorb_product(self, piece: np.ndarray, product: jnp.ndarray) -> None:
+        """Fold one already-reached piece into the tail (service fast path).
+
+        ``piece`` must fit inside the current seal boundary (``tail_room``);
+        ``product`` is its (ℓp, ℓp) reach product — from ``_reach_piece`` or
+        from a batched reach the serving layer ran across sessions.
+        """
+        if len(piece) > self.tail_room():
+            raise ValueError(
+                f"piece of {len(piece)} chars crosses the seal boundary "
+                f"(tail_room={self.tail_room()}); split it first"
+            )
+        self._ensure_cache()
+        self._tail_product = self.engine.phases.compose(product, self._tail_product)
+        self._tail_pieces.append(np.asarray(piece, dtype=np.int32))
+        self._tail_len += len(piece)
+        self.appended_bytes += len(piece)
+        self._join = None
+        if self._tail_len == self._next_seal:
+            self._seal()
+
+    def _seal(self) -> None:
+        """Seal the full tail as an immutable chunk with its cached product."""
+        self._sealed_classes.append(np.concatenate(self._tail_pieces))
+        self._sealed_products.append(self._tail_product)
+        self._tail_pieces = []
+        self._tail_len = 0
+        self._tail_product = self._eye
+        grown = self._next_seal * 2
+        if self.max_seal_len is not None:
+            grown = min(grown, self.max_seal_len)
+        self._next_seal = grown
+
+    # ----------------------------------------------------------------- join
+
+    def _chunk_classes(self) -> List[np.ndarray]:
+        chunks = list(self._sealed_classes)
+        if self._tail_len:
+            chunks.append(np.concatenate(self._tail_pieces))
+        return chunks
+
+    def _stack_products(self) -> Tuple[jnp.ndarray, int]:
+        """Cached products stacked (c_pad, ℓp, ℓp); pad slots are identity.
+
+        c_pad = next_pow2(c_real + 1): at least one identity pad, so the
+        exclusive forward entries extend one slot past the real chunks and
+        ``Jf[c_real]`` is the forward state after the whole prefix.
+        """
+        products = list(self._sealed_products)
+        if self._tail_len:
+            products.append(self._tail_product)
+        c_real = len(products)
+        c_pad = _next_pow2(c_real + 1)
+        products.extend([self._eye] * (c_pad - c_real))
+        return jnp.stack(products), c_real
+
+    def _refresh_join(self) -> None:
+        if self.n == 0:
+            self._join = None
+            return
+        t = self.engine.tables
+        P, c_real = self._stack_products()
+        Jf, Jb, col0p = self.engine.phases.join(P, t.I, t.F)
+        self._join = (Jf, Jb, col0p, c_real)
+
+    def _joined(self):
+        self._ensure_cache()
+        if self._join is None:
+            self._refresh_join()
+        return self._join
+
+    @property
+    def accepted(self) -> bool:
+        """Is the current prefix a valid text?  O(1) from the join cache."""
+        t = self.engine.tables
+        if self.n == 0:
+            return bool(np.any(np.asarray(t.I) * np.asarray(t.F)))
+        Jf, _, _, c_real = self._joined()
+        final_fwd = np.asarray(Jf[c_real])   # forward state after the prefix
+        return bool(np.any(final_fwd * np.asarray(t.F)))
+
+    # ----------------------------------------------------------------- slpf
+
+    def current_slpf(self) -> SLPF:
+        """Clean SLPF of the whole current prefix.
+
+        Join over the cached products + one build&merge per chunk (bucketed
+        shapes) — zero reach work for sealed chunks.  Bit-identical to a
+        cold ``ParserEngine.parse`` of the same prefix.
+        """
+        eng = self.engine
+        t = eng.tables
+        chunks = self._chunk_classes()
+        classes = (
+            np.concatenate(chunks) if chunks else np.zeros(0, dtype=np.int32)
+        )
+        if len(classes) == 0:
+            col = (np.asarray(t.I, dtype=bool) & np.asarray(t.F, dtype=bool))
+            return SLPF(table=eng.table, columns=col[None, : t.ell], classes=classes)
+
+        Jf, Jb, col0p, c_real = self._joined()
+        assert c_real == len(chunks)
+        rows = [np.asarray(col0p)[None]]
+        for i, ch in enumerate(chunks):
+            k = self._bucket_len(len(ch))
+            padded = jnp.asarray(eng._pad_to(ch, 1, k))
+            Mp = eng.phases.build_merge(t.N, padded, Jf[i][None], Jb[i][None])
+            rows.append(np.asarray(Mp)[0, : len(ch)])
+        packed = np.concatenate(rows, axis=0)
+        columns = unpack_bits(packed, t.ell, axis=-1)
+        return SLPF(table=eng.table, columns=columns, classes=classes)
+
+    def count_trees(self) -> int:
+        return self.current_slpf().count_trees()
+
+    # ----------------------------------------------------- snapshot / evict
+
+    def snapshot(self) -> StreamSnapshot:
+        """O(1)-device capture of the stream state (products shared by ref).
+
+        A cold (evicted) parser snapshots without rebuilding: the snapshot
+        records the cold state and restore defers the rebuild to next touch.
+        """
+        tail = (
+            np.concatenate(self._tail_pieces)
+            if self._tail_len
+            else np.zeros(0, dtype=np.int32)
+        )
+        return StreamSnapshot(
+            sealed_classes=tuple(s.copy() for s in self._sealed_classes),
+            sealed_products=None if self._cold else tuple(self._sealed_products),
+            tail_classes=tail,
+            tail_product=None if self._cold else self._tail_product,
+            next_seal_len=self._next_seal,
+        )
+
+    def restore(self, snap: StreamSnapshot) -> None:
+        """Reinstate a snapshot taken on this engine's table set."""
+        self._sealed_classes = [s.copy() for s in snap.sealed_classes]
+        self._tail_pieces = (
+            [snap.tail_classes.copy()] if len(snap.tail_classes) else []
+        )
+        self._tail_len = int(len(snap.tail_classes))
+        self._next_seal = int(snap.next_seal_len)
+        self._join = None
+        if snap.sealed_products is None:       # cold snapshot
+            self._sealed_products = []
+            self._tail_product = self._eye
+            self._cold = True
+        else:
+            self._sealed_products = list(snap.sealed_products)
+            self._tail_product = snap.tail_product
+            self._cold = False
+
+    def drop_cache(self) -> None:
+        """Release all device product arrays (serving-layer eviction).
+
+        Classes stay host-side; the next ``append``/``current_slpf``
+        transparently re-reaches the sealed chunks (counted in
+        ``rebuilds``).  Results are unaffected — only the work is.
+        """
+        self._sealed_products = []
+        self._tail_product = self._eye
+        self._join = None
+        self._cold = True
+
+    def _ensure_cache(self) -> None:
+        if not self._cold:
+            return
+        self._cold = False
+        self.rebuilds += 1
+        self._sealed_products = [self._reach_piece(s) for s in self._sealed_classes]
+        self._tail_product = self._eye
+        if self._tail_len:
+            tail = np.concatenate(self._tail_pieces)
+            self._tail_product = self._reach_piece(tail)

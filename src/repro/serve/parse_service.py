@@ -14,29 +14,74 @@ Scheduling policy: each ``step`` serves the bucket holding the *oldest*
 queued request (FIFO fairness), batching every same-bucket request behind it
 up to ``max_batch`` — mixed-length traffic aggregates into full batches
 without head-of-line blocking on rare shapes.
+
+Instrumentation (``ParseService.stats``): queue depth (current and peak) and
+per-bucket served-count / batch-count / latency aggregates — the observables
+the ROADMAP's SLO item (p50/p99 targets, deadline-aware admission) builds on.
+``serve/stream_service.py`` exposes the same stats shape for streaming
+sessions.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
-from typing import Deque, List, Optional, Tuple, Union
+from typing import Deque, Dict, Hashable, List, Optional, Tuple, Union
 
 import numpy as np
 
 from ..core.backend import ParserBackend
-from ..core.engine import ParserEngine
+from ..core.engine import resolve_engine
 from ..core.slpf import SLPF
+
+
+@dataclasses.dataclass
+class BucketStats:
+    """Served-count / latency aggregates for one device-program bucket."""
+
+    served: int = 0
+    batches: int = 0
+    total_latency_s: float = 0.0
+    max_latency_s: float = 0.0
+
+    def record(self, latency_s: float) -> None:
+        self.served += 1
+        self.total_latency_s += latency_s
+        self.max_latency_s = max(self.max_latency_s, latency_s)
+
+    @property
+    def mean_latency_s(self) -> float:
+        return self.total_latency_s / self.served if self.served else 0.0
+
+    def as_dict(self) -> Dict[str, float]:
+        return {
+            "served": self.served,
+            "batches": self.batches,
+            "mean_latency_s": self.mean_latency_s,
+            "max_latency_s": self.max_latency_s,
+        }
+
+
+def bucket_stats_dict(
+    buckets: Dict[Hashable, BucketStats]
+) -> Dict[Hashable, Dict[str, float]]:
+    return {b: s.as_dict() for b, s in sorted(buckets.items())}
 
 
 @dataclasses.dataclass
 class ParseRequest:
     rid: int
     text: Union[bytes, str]
-    # cached at submit so scheduling never re-tokenizes queued texts:
+    # cached at submit so scheduling never re-tokenizes or re-buckets queued
+    # texts (bucket_shape is pure in (len, n_chunks) — computing it per step
+    # was O(queue) redundant work per batch):
     classes: Optional[np.ndarray] = None
+    bucket: Optional[Tuple[int, int]] = None
+    submitted_at: float = dataclasses.field(default_factory=time.perf_counter)
     # filled by the service:
     slpf: Optional[SLPF] = None
+    latency_s: Optional[float] = None
 
     @property
     def done(self) -> bool:
@@ -54,23 +99,15 @@ class ParseService:
         max_batch: int = 8,
         n_chunks: int = 8,
     ):
-        if isinstance(matrices_or_engine, ParserEngine):
-            if backend is not None:
-                raise ValueError(
-                    "pass backend= only when the service builds the engine; "
-                    "a prebuilt ParserEngine already owns its backend"
-                )
-            self.engine = matrices_or_engine
-        else:
-            self.engine = ParserEngine(
-                matrices_or_engine, backend=backend if backend is not None else "jnp"
-            )
+        self.engine = resolve_engine(matrices_or_engine, backend)
         self.max_batch = max(1, max_batch)
         self.n_chunks = n_chunks
         self._queue: Deque[ParseRequest] = deque()
         self._done: List[ParseRequest] = []
         self._next_rid = 0
         self.batches_run = 0
+        self._peak_queue_depth = 0
+        self._buckets: Dict[Tuple[int, int], BucketStats] = {}
 
     # ------------------------------------------------------------- admission
 
@@ -78,13 +115,23 @@ class ParseService:
         """Enqueue a text; returns its request id."""
         rid = self._next_rid
         self._next_rid += 1
+        classes = self.engine.classes_of_text(text)
         self._queue.append(
-            ParseRequest(rid=rid, text=text, classes=self.engine.classes_of_text(text))
+            ParseRequest(
+                rid=rid,
+                text=text,
+                classes=classes,
+                bucket=self.engine.bucket_shape(len(classes), self.n_chunks),
+                submitted_at=time.perf_counter(),
+            )
         )
+        self._peak_queue_depth = max(self._peak_queue_depth, len(self._queue))
         return rid
 
     def _bucket_of(self, req: ParseRequest) -> Tuple[int, int]:
-        return self.engine.bucket_shape(len(req.classes), self.n_chunks)
+        if req.bucket is None:  # externally-constructed request
+            req.bucket = self.engine.bucket_shape(len(req.classes), self.n_chunks)
+        return req.bucket
 
     # ---------------------------------------------------------------- serving
 
@@ -107,9 +154,14 @@ class ParseService:
         slpfs = self.engine.parse_batch(
             [req.classes for req in batch], n_chunks=self.n_chunks
         )
+        now = time.perf_counter()
+        stats = self._buckets.setdefault(head_bucket, BucketStats())
         for req, slpf in zip(batch, slpfs):
             req.slpf = slpf
+            req.latency_s = now - req.submitted_at
+            stats.record(req.latency_s)
             self._done.append(req)
+        stats.batches += 1
         self.batches_run += 1
         return True
 
@@ -130,3 +182,14 @@ class ParseService:
     @property
     def pending(self) -> int:
         return len(self._queue)
+
+    @property
+    def stats(self) -> Dict:
+        """Queue-depth + per-bucket served/latency aggregates (SLO inputs)."""
+        return {
+            "pending": len(self._queue),
+            "peak_queue_depth": self._peak_queue_depth,
+            "batches_run": self.batches_run,
+            "compile_count": self.compile_count,
+            "buckets": bucket_stats_dict(self._buckets),
+        }

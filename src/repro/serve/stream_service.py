@@ -1,0 +1,302 @@
+"""Session-level streaming parse service: many live streams, one engine.
+
+``serve/parse_service.py`` batches *one-shot* texts; this module serves
+*streams* — sessions that grow by appends and may ask for their SLPF at any
+prefix.  It is the slot pattern a third time: host-side session state, a
+small static set of device-program shapes, work admitted the moment it can
+join a batch.
+
+  sessions    each owns a ``core/stream.py`` ``StreamingParser`` (its
+              persistent chunk-product prefix cache) over ONE shared
+              ``ParserEngine`` — every session reuses the same compiled
+              phase programs.
+  batching    queued appends are split into seal-bounded pieces; ``step``
+              picks the piece bucket of the *oldest* active session (FIFO)
+              and runs ONE batched reach for every same-bucket session's
+              next piece (chunk axis = session axis; pad rows are all-PAD →
+              identity products, discarded).  Each product then folds into
+              its session's tail with one ``compose``.
+  eviction    a bytes-cached budget over all sessions' device caches; when
+              exceeded, the least-recently-touched sessions' caches are
+              dropped (``StreamingParser.drop_cache``) — their classes stay
+              host-side and the cache rebuilds transparently on next touch
+              (counted in ``stats["rebuilds"]``), so eviction trades work,
+              never correctness.
+
+``stats`` mirrors ``ParseService.stats``: queue depth + per-bucket
+served-count/latency aggregates (bucket key = piece chunk length k).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Deque, Dict, List, Optional, Tuple, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.backend import ParserBackend
+from ..core.engine import _next_pow2, resolve_engine
+from ..core.slpf import SLPF
+from ..core.stream import StreamingParser
+from .parse_service import BucketStats, bucket_stats_dict
+
+
+@dataclasses.dataclass
+class _PendingAppend:
+    classes: np.ndarray
+    offset: int = 0                      # chars already absorbed
+    enqueued_at: float = 0.0
+
+    @property
+    def remaining(self) -> int:
+        return len(self.classes) - self.offset
+
+
+@dataclasses.dataclass
+class StreamSession:
+    sid: int
+    parser: StreamingParser
+    pending: Deque[_PendingAppend] = dataclasses.field(default_factory=deque)
+    arrival_seq: int = 0                 # FIFO key while active
+    last_touch: int = 0                  # LRU key for eviction
+
+    @property
+    def pending_chars(self) -> int:
+        return sum(p.remaining for p in self.pending)
+
+
+class StreamService:
+    """Bucket-batched scheduler over many ``StreamingParser`` sessions."""
+
+    def __init__(
+        self,
+        matrices_or_engine,
+        *,
+        backend: Union[str, ParserBackend, None] = None,
+        max_batch: int = 8,
+        first_seal_len: int = 8,
+        max_seal_len: Optional[int] = None,
+        cache_budget_bytes: Optional[int] = None,
+    ):
+        self.engine = resolve_engine(matrices_or_engine, backend)
+        self.max_batch = max(1, max_batch)
+        self.first_seal_len = first_seal_len
+        self.max_seal_len = max_seal_len
+        self.cache_budget_bytes = cache_budget_bytes
+
+        self._sessions: Dict[int, StreamSession] = {}
+        self._next_sid = 0
+        self._seq = 0                    # global arrival / touch clock
+        self.batches_run = 0
+        self.evictions = 0
+        self._peak_queue_depth = 0
+        self._buckets: Dict[int, BucketStats] = {}
+
+    # ------------------------------------------------------------- sessions
+
+    def open(self) -> int:
+        """Open a streaming session; returns its session id."""
+        sid = self._next_sid
+        self._next_sid += 1
+        self._sessions[sid] = StreamSession(
+            sid=sid,
+            parser=StreamingParser(
+                self.engine,
+                first_seal_len=self.first_seal_len,
+                max_seal_len=self.max_seal_len,
+            ),
+            last_touch=self._tick(),
+        )
+        return sid
+
+    def close(self, sid: int) -> None:
+        del self._sessions[sid]
+
+    def _tick(self) -> int:
+        self._seq += 1
+        return self._seq
+
+    def _session(self, sid: int) -> StreamSession:
+        return self._sessions[sid]
+
+    # --------------------------------------------------------------- append
+
+    def append(self, sid: int, text) -> int:
+        """Queue text onto a session; returns chars queued.  Work happens in
+        ``step``/``drain`` so concurrent sessions batch on the device."""
+        s = self._session(sid)
+        classes = self.engine.classes_of_text(text)
+        if len(classes):
+            if not s.pending:
+                s.arrival_seq = self._tick()
+            s.pending.append(
+                _PendingAppend(classes=classes, enqueued_at=time.perf_counter())
+            )
+            s.last_touch = self._tick()
+        self._peak_queue_depth = max(self._peak_queue_depth, self.pending_appends)
+        return len(classes)
+
+    def _next_piece_len(self, s: StreamSession) -> int:
+        return min(s.parser.tail_room(), s.pending[0].remaining)
+
+    def _piece_bucket(self, s: StreamSession) -> int:
+        # the parser's own bucketing, so the batched reach grid hits exactly
+        # the shapes a solo append would compile
+        return s.parser._bucket_len(self._next_piece_len(s))
+
+    def _take_piece(self, s: StreamSession, m: int) -> Tuple[np.ndarray, Optional[float]]:
+        """Consume m chars from the head pending append; returns (classes,
+        enqueue-time if that append completed)."""
+        head = s.pending[0]
+        piece = head.classes[head.offset : head.offset + m]
+        head.offset += m
+        completed_at = None
+        if head.remaining == 0:
+            completed_at = head.enqueued_at
+            s.pending.popleft()
+        return piece, completed_at
+
+    # ---------------------------------------------------------------- serving
+
+    def step(self) -> bool:
+        """Absorb one piece-batch (oldest session's bucket); False when idle.
+
+        One batched reach serves every selected session's next piece; the
+        per-session compose/seal bookkeeping is O(1) device work each.
+        """
+        active = sorted(
+            (s for s in self._sessions.values() if s.pending),
+            key=lambda s: s.arrival_seq,
+        )
+        if not active:
+            return False
+        bucket = self._piece_bucket(active[0])
+        batch: List[StreamSession] = []
+        for s in active:
+            if self._piece_bucket(s) == bucket:
+                batch.append(s)
+                if len(batch) == self.max_batch:
+                    break
+
+        # One (B_pad, k) reach across sessions: chunk axis = session axis.
+        pieces: List[np.ndarray] = []
+        finished: List[Optional[float]] = []
+        for s in batch:
+            piece, done_at = self._take_piece(s, self._next_piece_len(s))
+            pieces.append(piece)
+            finished.append(done_at)
+        B_pad = _next_pow2(len(batch))
+        grid = np.full((B_pad, bucket), self.engine.tables.pad_class, dtype=np.int32)
+        for row, piece in enumerate(pieces):
+            grid[row, : len(piece)] = piece
+        products = self.engine.phases.reach(self.engine.tables.N, jnp.asarray(grid))
+
+        now = time.perf_counter()
+        stats = self._buckets.setdefault(bucket, BucketStats())
+        for row, s in enumerate(batch):
+            s.parser.absorb_product(pieces[row], products[row])
+            s.last_touch = self._tick()
+            if s.pending:
+                s.arrival_seq = self._tick()   # requeue behind current arrivals
+            if finished[row] is not None:
+                stats.record(now - finished[row])
+        stats.batches += 1
+        self.batches_run += 1
+        self._maybe_evict()
+        return True
+
+    def drain(self) -> None:
+        """Absorb every queued append across all sessions."""
+        while self.step():
+            pass
+
+    def _drain_session(self, s: StreamSession) -> None:
+        """Absorb ONE session's pending appends (unbatched reach per piece) —
+        a query's latency must not scale with other sessions' backlogs."""
+        while s.pending:
+            piece, done_at = self._take_piece(s, self._next_piece_len(s))
+            bucket = s.parser._bucket_len(len(piece))
+            s.parser.absorb_product(piece, s.parser._reach_piece(piece))
+            if done_at is not None:
+                self._buckets.setdefault(bucket, BucketStats()).record(
+                    time.perf_counter() - done_at
+                )
+
+    # ----------------------------------------------------------------- query
+
+    def slpf(self, sid: int) -> SLPF:
+        """Current SLPF of one session's full prefix (drains ITS pending)."""
+        s = self._session(sid)
+        self._drain_session(s)
+        s.last_touch = self._tick()
+        out = s.parser.current_slpf()
+        self._maybe_evict()
+        return out
+
+    def accepted(self, sid: int) -> bool:
+        s = self._session(sid)
+        self._drain_session(s)
+        s.last_touch = self._tick()
+        return s.parser.accepted
+
+    # -------------------------------------------------------------- eviction
+
+    @property
+    def bytes_cached(self) -> int:
+        return sum(s.parser.cache_nbytes for s in self._sessions.values())
+
+    def _maybe_evict(self) -> None:
+        """Drop LRU sessions' device caches until under the bytes budget."""
+        if self.cache_budget_bytes is None:
+            return
+        total = self.bytes_cached       # summed once; decremented per evict
+        if total <= self.cache_budget_bytes:
+            return
+        by_lru = sorted(self._sessions.values(), key=lambda s: s.last_touch)
+        for s in by_lru[:-1]:            # never evict the most recent session
+            if total <= self.cache_budget_bytes:
+                break
+            freed = s.parser.cache_nbytes
+            if freed == 0:
+                continue
+            s.parser.drop_cache()
+            total -= freed
+            self.evictions += 1
+
+    # ------------------------------------------------------------------ stats
+
+    @property
+    def pending_chars(self) -> int:
+        return sum(s.pending_chars for s in self._sessions.values())
+
+    @property
+    def pending_appends(self) -> int:
+        """Queued append requests not yet fully absorbed (request units —
+        comparable with ``ParseService``'s queue depth)."""
+        return sum(len(s.pending) for s in self._sessions.values())
+
+    @property
+    def compile_count(self) -> int:
+        return self.engine.compile_count
+
+    @property
+    def stats(self) -> Dict:
+        """Same shape and units as ``ParseService.stats`` — ``pending`` and
+        ``peak_queue_depth`` count append *requests* (bucket key = piece
+        length k) — plus cache/eviction observables for the bytes budget
+        (``pending_chars`` carries the char-level backlog)."""
+        return {
+            "sessions": len(self._sessions),
+            "pending": self.pending_appends,
+            "pending_chars": self.pending_chars,
+            "peak_queue_depth": self._peak_queue_depth,
+            "batches_run": self.batches_run,
+            "compile_count": self.compile_count,
+            "bytes_cached": self.bytes_cached,
+            "evictions": self.evictions,
+            "rebuilds": sum(s.parser.rebuilds for s in self._sessions.values()),
+            "buckets": bucket_stats_dict(self._buckets),
+        }

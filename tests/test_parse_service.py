@@ -63,6 +63,48 @@ def test_service_rejects_backend_with_prebuilt_engine(art):
         ParseService(eng, backend="pallas")
 
 
+def test_bucket_cached_at_submit_not_per_step(art, monkeypatch):
+    """The service buckets each request once (at submit); scheduling never
+    recomputes bucket_shape for queued requests (was O(queue) per step)."""
+    svc = ParseService(art.matrices, max_batch=2, n_chunks=4)
+    texts = ["ab" * (i + 1) for i in range(6)]
+    for t in texts:
+        svc.submit(t)
+    queued = list(svc._queue)
+    assert all(r.bucket is not None for r in queued)
+
+    def boom(n, c):
+        raise AssertionError("bucket_shape recomputed during scheduling")
+
+    monkeypatch.setattr(svc.engine, "bucket_shape", boom)
+    for req in queued:
+        svc._bucket_of(req)              # served from the submit-time cache
+    monkeypatch.undo()                   # engine.parse_batch buckets its batch
+    done = svc.run()
+    assert len(done) == len(texts)
+
+
+def test_service_stats(art):
+    svc = ParseService(art.matrices, max_batch=2, n_chunks=4)
+    for t in ["abab", "ba", "a" * 60, "ababab"]:   # two buckets
+        svc.submit(t)
+    assert svc.stats["pending"] == 4
+    assert svc.stats["peak_queue_depth"] == 4
+    done = svc.run()
+    st = svc.stats
+    assert st["pending"] == 0
+    assert st["batches_run"] == svc.batches_run >= 2
+    assert st["compile_count"] == svc.compile_count
+    served = sum(v["served"] for v in st["buckets"].values())
+    assert served == 4
+    assert sum(v["batches"] for v in st["buckets"].values()) == svc.batches_run
+    for v in st["buckets"].values():
+        assert 0.0 <= v["mean_latency_s"] <= v["max_latency_s"]
+    for req in done:
+        assert req.latency_s is not None and req.latency_s >= 0.0
+        assert req.bucket is not None
+
+
 def test_service_accepts_prebuilt_engine(art):
     eng = ParserEngine(art.matrices, backend="pallas")
     svc = ParseService(eng, max_batch=2, n_chunks=2)

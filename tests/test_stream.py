@@ -1,0 +1,246 @@
+"""Streaming incremental parse (core/stream.py) vs the cold engine + oracles.
+
+Every incremental state must be *bit-identical* to a cold parse of the same
+prefix — packed columns and tree counts — on an ambiguous RE, for any split
+of the text into appends, across seal boundaries, and after snapshot/restore
+or cache eviction.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.engine import ParserEngine
+from repro.core.reference import ParallelArtifacts, parse_parallel_reference
+from repro.core.serial import parse_serial_matrix
+from repro.core.stream import StreamingParser
+
+AMBIG = "(a|b|ab)+"   # ambiguous: many LSTs per text
+
+TEXTS = ["b", "ab", "abab", "ababab", "a" * 23, "ab" * 40, "ba", "axb"]
+
+
+@pytest.fixture(scope="module")
+def art():
+    return ParallelArtifacts.generate(AMBIG)
+
+
+@pytest.fixture(scope="module")
+def engine(art):
+    return ParserEngine(art.matrices)
+
+
+def _splits(text, cuts):
+    pieces, prev = [], 0
+    for c in list(cuts) + [len(text)]:
+        pieces.append(text[prev:c])
+        prev = c
+    return pieces
+
+
+def _assert_stream_equals_cold(sp, engine, art, prefix):
+    got = sp.current_slpf()
+    cold = engine.parse(prefix)
+    assert np.array_equal(got.pack(), cold.pack()), prefix
+    assert got.count_trees() == cold.count_trees()
+    ref = parse_serial_matrix(art.matrices, prefix)
+    assert np.array_equal(got.columns, ref.columns)
+
+
+@pytest.mark.parametrize("text", TEXTS)
+def test_single_append_equals_cold_parse(art, engine, text):
+    sp = StreamingParser(engine, first_seal_len=4)
+    sp.append(text)
+    _assert_stream_equals_cold(sp, engine, art, text)
+
+
+def test_every_split_of_a_text(art, engine):
+    text = "abababab"
+    for c1 in range(len(text) + 1):
+        for c2 in range(c1, len(text) + 1):
+            sp = StreamingParser(engine, first_seal_len=4)
+            for piece in _splits(text, [c1, c2]):
+                sp.append(piece)
+            _assert_stream_equals_cold(sp, engine, art, text)
+
+
+def test_char_at_a_time_every_prefix(art, engine):
+    """Each intermediate state is exact, not just the final one."""
+    text = "ab" * 9
+    sp = StreamingParser(engine, first_seal_len=4)
+    for i, ch in enumerate(text):
+        sp.append(ch)
+        prefix = text[: i + 1]
+        got = sp.current_slpf()
+        cold = engine.parse(prefix)
+        assert np.array_equal(got.pack(), cold.pack()), prefix
+        assert got.count_trees() == cold.count_trees()
+
+
+def test_matches_paper_reference_oracle(art, engine):
+    text = "ababab"
+    sp = StreamingParser(engine, first_seal_len=4)
+    for piece in ("ab", "a", "bab"):
+        sp.append(piece)
+    got = sp.current_slpf()
+    paper = parse_parallel_reference(art, text, c=3)
+    assert np.array_equal(got.columns, paper.columns)
+
+
+def test_empty_stream(art, engine):
+    sp = StreamingParser(engine)
+    assert sp.n == 0
+    slpf = sp.current_slpf()
+    expected = (art.matrices.I & art.matrices.F)[None, :]
+    assert np.array_equal(slpf.columns, expected)
+    assert slpf.classes.shape == (0,)
+    cold = engine.parse("")
+    assert np.array_equal(slpf.pack(), cold.pack())
+    # empty prefix of (a|b|ab)+ is not a valid text
+    assert sp.accepted == cold.accepted
+
+
+def test_zero_length_appends_are_noops(art, engine):
+    sp = StreamingParser(engine, first_seal_len=4)
+    assert sp.append("") == 0
+    sp.append("abab")
+    before = sp.current_slpf().pack()
+    assert sp.append("") == 0
+    assert sp.append(b"") == 0
+    assert sp.n == 4
+    assert np.array_equal(sp.current_slpf().pack(), before)
+    _assert_stream_equals_cold(sp, engine, art, "abab")
+
+
+def test_append_crossing_seal_boundaries(art, engine):
+    """One append spanning several geometric seal boundaries at once."""
+    sp = StreamingParser(engine, first_seal_len=4)
+    sp.append("ab")                       # tail only
+    text = "ab" + "ab" * 20               # crosses the 4- and 8-seals (+ more)
+    sp.append("ab" * 20)
+    assert sp.n_sealed_chunks >= 2
+    _assert_stream_equals_cold(sp, engine, art, text)
+
+
+def test_geometric_sealing_bounds_chunk_count(engine):
+    sp = StreamingParser(engine, first_seal_len=4)
+    n = 500
+    sp.append("ab" * (n // 2))
+    # sealed lengths 4, 8, 16, … — O(log n) chunks, power-of-two sizes only
+    assert sp.n_sealed_chunks <= int(np.log2(n)) + 1
+    lens = [len(c) for c in sp._sealed_classes]
+    assert all(l & (l - 1) == 0 for l in lens)
+    assert lens == sorted(lens)
+
+
+def test_snapshot_restore_roundtrip(art, engine):
+    sp = StreamingParser(engine, first_seal_len=4)
+    sp.append("abab")
+    sp.append("ab")
+    snap = sp.snapshot()
+    base = sp.current_slpf().pack()
+
+    sp.append("ba" * 8)                   # diverge (crosses a seal)
+    _assert_stream_equals_cold(sp, engine, art, "ababab" + "ba" * 8)
+
+    sp.restore(snap)
+    assert sp.n == 6
+    assert np.array_equal(sp.current_slpf().pack(), base)
+    sp.append("abab")                     # re-diverge differently
+    _assert_stream_equals_cold(sp, engine, art, "ababab" + "abab")
+
+    # restore into a *fresh* parser on the same engine
+    sp2 = StreamingParser(engine, first_seal_len=4)
+    sp2.restore(snap)
+    assert np.array_equal(sp2.current_slpf().pack(), base)
+
+
+def test_accepted_tracks_prefix_validity(engine):
+    sp = StreamingParser(engine, first_seal_len=4)
+    for ch, ok in [("a", True), ("b", True), ("x", False), ("a", False)]:
+        sp.append(ch)
+        assert sp.accepted == ok, sp.n
+
+
+def test_invalid_text_empty_forest(art, engine):
+    sp = StreamingParser(engine, first_seal_len=4)
+    sp.append("a")
+    sp.append("xb")                       # 'x' has no arc: forest dies
+    got = sp.current_slpf()
+    assert not got.accepted and got.count_trees() == 0
+    _assert_stream_equals_cold(sp, engine, art, "axb")
+
+
+def test_no_per_append_rejit(art, engine):
+    """Steady-state appends reuse the bucketed phase programs: a second
+    identical stream compiles nothing new."""
+    eng = ParserEngine(art.matrices)   # fresh engine: clean compile counter
+    text = "ab" * 40
+
+    def stream():
+        sp = StreamingParser(eng, first_seal_len=4)
+        for ch in text:
+            sp.append(ch)
+        return sp.current_slpf()
+
+    first = stream()
+    warm = eng.compile_count
+    second = stream()
+    assert eng.compile_count == warm       # zero re-jit on the warm stream
+    assert np.array_equal(first.pack(), second.pack())
+
+
+def test_drop_cache_rebuilds_transparently(art, engine):
+    sp = StreamingParser(engine, first_seal_len=4)
+    sp.append("abab" * 4)
+    assert sp.cache_nbytes > 0
+    sp.drop_cache()
+    assert sp.cache_nbytes == 0
+    _assert_stream_equals_cold(sp, engine, art, "abab" * 4)   # rebuilt
+    assert sp.rebuilds == 1 and sp.cache_nbytes > 0
+    sp.append("ab")                        # appending after eviction works too
+    _assert_stream_equals_cold(sp, engine, art, "abab" * 4 + "ab")
+
+
+def test_snapshot_of_cold_parser_is_o1_and_restores(art, engine):
+    """Snapshotting an evicted parser must not rebuild its device cache."""
+    sp = StreamingParser(engine, first_seal_len=4)
+    sp.append("abab" * 3)
+    sp.drop_cache()
+    snap = sp.snapshot()
+    assert sp.cache_nbytes == 0 and sp.rebuilds == 0   # still cold
+    sp2 = StreamingParser(engine, first_seal_len=4)
+    sp2.restore(snap)
+    _assert_stream_equals_cold(sp2, engine, art, "abab" * 3)
+    assert sp2.rebuilds == 1                           # rebuilt on touch
+
+
+def test_absorb_product_rejects_boundary_crossing(engine):
+    sp = StreamingParser(engine, first_seal_len=4)
+    with pytest.raises(ValueError, match="seal boundary"):
+        sp.absorb_product(np.zeros(9, dtype=np.int32), sp._eye)
+
+
+def test_max_seal_len_caps_chunk_size(art, engine):
+    sp = StreamingParser(engine, first_seal_len=4, max_seal_len=100)
+    assert sp.max_seal_len == 64          # floored: the cap is never exceeded
+    sp.append("ab" * 100)
+    assert max(len(c) for c in sp._sealed_classes) <= 64
+    _assert_stream_equals_cold(sp, engine, art, "ab" * 100)
+
+
+def test_streaming_on_pallas_backend(art):
+    """The same prefix cache runs on the Pallas kernels (interpret on CPU),
+    bit-identical to the jnp cold parse."""
+    eng = ParserEngine(art.matrices, backend="pallas")
+    sp = StreamingParser(eng, first_seal_len=4)
+    for piece in ("ab", "ab", "abab"):
+        sp.append(piece)
+    got = sp.current_slpf()
+    cold = ParserEngine(art.matrices).parse("ababab" + "ab")
+    assert np.array_equal(got.pack(), cold.pack())
+    assert got.count_trees() == cold.count_trees()
+
+
+def test_rejects_backend_with_prebuilt_engine(art, engine):
+    with pytest.raises(ValueError, match="prebuilt ParserEngine"):
+        StreamingParser(engine, backend="pallas")

@@ -1,0 +1,156 @@
+"""Session-level streaming service (serve/stream_service.py)."""
+
+import numpy as np
+import pytest
+
+from repro.core.engine import ParserEngine
+from repro.core.reference import ParallelArtifacts
+from repro.core.serial import parse_serial_matrix
+from repro.serve.stream_service import StreamService
+
+AMBIG = "(a|b|ab)+"
+
+
+@pytest.fixture(scope="module")
+def art():
+    return ParallelArtifacts.generate(AMBIG)
+
+
+@pytest.fixture(scope="module")
+def engine(art):
+    return ParserEngine(art.matrices)
+
+
+def test_interleaved_sessions_are_exact(art, engine):
+    svc = StreamService(engine, max_batch=4, first_seal_len=4)
+    texts = {0: "abab" * 3, 1: "b" + "ab" * 10, 2: "ba", 3: ""}
+    sids = {k: svc.open() for k in texts}
+    # interleave appends round-robin, two chars at a time
+    offsets = {k: 0 for k in texts}
+    while any(offsets[k] < len(texts[k]) for k in texts):
+        for k in texts:
+            piece = texts[k][offsets[k] : offsets[k] + 2]
+            offsets[k] += len(piece)
+            if piece:
+                svc.append(sids[k], piece)
+    for k, text in texts.items():
+        got = svc.slpf(sids[k])
+        ref = parse_serial_matrix(art.matrices, text)
+        assert np.array_equal(got.columns, ref.columns), text
+        cold = engine.parse(text)
+        assert np.array_equal(got.pack(), cold.pack())
+
+
+def test_same_bucket_sessions_share_one_reach_batch(engine):
+    svc = StreamService(engine, max_batch=8, first_seal_len=8)
+    sids = [svc.open() for _ in range(8)]
+    for sid in sids:
+        svc.append(sid, "abab")          # same piece bucket for every session
+    svc.drain()
+    assert svc.batches_run == 1          # one batched reach, not 8
+    assert svc.pending_chars == 0
+
+
+def test_fifo_and_max_batch(engine):
+    svc = StreamService(engine, max_batch=2, first_seal_len=8)
+    sids = [svc.open() for _ in range(5)]
+    for sid in sids:
+        svc.append(sid, "ab")
+    svc.drain()
+    assert svc.batches_run == 3          # ceil(5 / 2)
+
+
+def test_eviction_by_bytes_budget_is_exact(art, engine):
+    per_product = engine.tables.ell_pad ** 2 * 4
+    svc = StreamService(
+        engine, max_batch=4, first_seal_len=4,
+        cache_budget_bytes=3 * per_product,   # room for ~1 session's cache
+    )
+    texts = {0: "abab" * 4, 1: "ab" * 9, 2: "ba" + "ab" * 6}
+    sids = {k: svc.open() for k in texts}
+    for k, text in texts.items():
+        svc.append(sids[k], text)
+    svc.drain()
+    assert svc.evictions > 0             # budget forced cache drops
+    for k, text in texts.items():        # …but results are untouched
+        got = svc.slpf(sids[k])
+        ref = parse_serial_matrix(art.matrices, text)
+        assert np.array_equal(got.columns, ref.columns), text
+    assert svc.stats["rebuilds"] > 0     # evicted sessions rebuilt on touch
+
+
+def test_stats_shape_and_contents(engine):
+    svc = StreamService(engine, max_batch=4, first_seal_len=8)
+    a, b = svc.open(), svc.open()
+    svc.append(a, "abab")
+    svc.append(b, "ab" * 8)
+    svc.drain()
+    svc.slpf(a)
+    st = svc.stats
+    for key in ("sessions", "pending", "peak_queue_depth", "batches_run",
+                "compile_count", "bytes_cached", "evictions", "rebuilds",
+                "buckets"):
+        assert key in st, key
+    assert st["sessions"] == 2 and st["pending"] == 0
+    assert st["pending_chars"] == 0
+    assert st["peak_queue_depth"] == 2   # request units, like ParseService
+    assert st["bytes_cached"] > 0 and st["evictions"] == 0
+    served = sum(v["served"] for v in st["buckets"].values())
+    assert served == 2                   # one completed append per session
+    for v in st["buckets"].values():
+        assert v["mean_latency_s"] >= 0.0
+        assert v["max_latency_s"] >= v["mean_latency_s"]
+
+
+def test_steady_state_sessions_never_recompile(art):
+    eng = ParserEngine(art.matrices)
+    svc = StreamService(eng, max_batch=4, first_seal_len=4)
+    def one_round():
+        sids = [svc.open() for _ in range(3)]
+        for sid in sids:
+            for piece in ("ab", "abab", "ab" * 6):
+                svc.append(sid, piece)
+        for sid in sids:
+            svc.slpf(sid)
+            svc.close(sid)
+    one_round()
+    warm = eng.compile_count
+    one_round()
+    assert eng.compile_count == warm
+
+
+def test_empty_session_holds_no_cache_bytes(engine):
+    """A fresh session's shared identity tail is not phantom cache — a tight
+    budget must not 'evict' empty sessions instead of real products."""
+    svc = StreamService(engine, first_seal_len=4, cache_budget_bytes=1)
+    svc.open()
+    assert svc.bytes_cached == 0
+    svc.drain()
+    assert svc.evictions == 0
+
+
+def test_slpf_drains_only_that_session(engine):
+    svc = StreamService(engine, first_seal_len=4)
+    a, b = svc.open(), svc.open()
+    svc.append(a, "abab")
+    svc.append(b, "ab" * 6)
+    svc.slpf(a)                          # must not absorb b's backlog
+    assert svc.stats["pending_chars"] == 12
+    svc.drain()
+    assert svc.stats["pending_chars"] == 0
+
+
+def test_close_frees_session(engine):
+    svc = StreamService(engine, first_seal_len=4)
+    sid = svc.open()
+    svc.append(sid, "ab")
+    svc.drain()
+    svc.close(sid)
+    assert svc.stats["sessions"] == 0 and svc.bytes_cached == 0
+    with pytest.raises(KeyError):
+        svc.slpf(sid)
+
+
+def test_rejects_backend_with_prebuilt_engine(engine):
+    with pytest.raises(ValueError, match="prebuilt ParserEngine"):
+        StreamService(engine, backend="pallas")
