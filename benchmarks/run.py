@@ -14,6 +14,10 @@ machine.  Mapping to the paper:
   streaming_append        — amortized cost per appended byte of the
                             StreamingParser prefix cache vs a cold full
                             re-parse per append (``--smoke`` = CI-tiny sizes)
+  sharded_throughput      — distributed runtime: 1-device vs all-host-device
+                            mesh at fixed batch (+ one long chunk-sharded
+                            text); run under
+                            XLA_FLAGS=--xla_force_host_platform_device_count=8
   recognizer      Fig. 16r — recognition cost (reach+join only)
   memory          App. C   — SLPF bytes/char, packed and compressed
   engine_roofline §Roofline— per-cell terms (from the dry-run JSON)
@@ -256,6 +260,69 @@ def bench_streaming_append(rows, quick, smoke=False):
         )  # make the CI smoke invocation a real gate, not a printout
 
 
+def bench_sharded_throughput(rows, quick, smoke=False):
+    """Distributed parse runtime: 1-device vs multi-device mesh, fixed batch.
+
+    Measures ``parse_batch`` (batch over 'data' × chunks over 'pod',
+    ``core/distributed.py``) and the single-long-text chunk-sharded route on
+    a plain engine vs a ``ParserEngine(mesh=...)`` over every host device.
+    Needs >1 device — CI runs it under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``, where the
+    "devices" share the same CPU cores: the numbers gauge partitioning
+    overhead, not speedup (real scaling needs a TPU pod slice).  ``--smoke``
+    additionally gates on bit-identity vs the single-device engine.
+    """
+    import jax
+    import numpy as np
+
+    from benchmarks.benchmark_res import BIGDATA_RE, make_text_exact
+    from repro.core.engine import ParserEngine
+    from repro.core.reference import ParallelArtifacts
+    from repro.launch.mesh import make_parse_mesh
+
+    n_dev = len(jax.devices())
+    if n_dev < 2:
+        rows.append(("sharded.skipped", n_dev, 0,
+                     "needs XLA_FLAGS=--xla_force_host_platform_device_count=8"))
+        return
+    art = ParallelArtifacts.generate(BIGDATA_RE)
+    n = 200 if smoke else (2_000 if quick else 64_000)
+    batch = 8
+    texts = [make_text_exact("BIGDATA", n - (i % 5), seed=i) for i in range(batch)]
+    long_text = make_text_exact("BIGDATA", 4 * n, seed=99)
+
+    eng1 = ParserEngine(art.matrices)
+    mesh = make_parse_mesh()
+    engM = ParserEngine(art.matrices, mesh=mesh)
+
+    base = eng1.parse_batch(texts, n_chunks=8)        # warm + reference
+    got = engM.parse_batch(texts, n_chunks=8)
+    ok = all(np.array_equal(g.pack(), b.pack()) for g, b in zip(got, base))
+    ok = ok and np.array_equal(
+        engM.parse(long_text).pack(), eng1.parse(long_text).pack()
+    )
+    rows.append(("sharded.bit_identical", n_dev, int(ok),
+                 "mesh == 1-device SLPF (must be 1)"))
+    if not ok:
+        raise SystemExit("sharded_throughput: mesh parse diverged from 1-device")
+
+    dt1 = _time(lambda: eng1.parse_batch(texts, n_chunks=8), reps=2)
+    dtM = _time(lambda: engM.parse_batch(texts, n_chunks=8), reps=2)
+    rows.append((f"sharded.batch.1dev.b{batch}", 1,
+                 round(batch / max(dt1, 1e-9), 1), f"texts/s n~{n}"))
+    rows.append((f"sharded.batch.mesh{n_dev}dev.b{batch}", n_dev,
+                 round(batch / max(dtM, 1e-9), 1),
+                 f"texts/s ratio={dt1 / max(dtM, 1e-9):.2f}x "
+                 f"mesh={dict(mesh.shape)}"))
+    dl1 = _time(lambda: eng1.parse(long_text, n_chunks=8), reps=2)
+    dlM = _time(lambda: engM.parse(long_text), reps=2)
+    rows.append((f"sharded.long.1dev", len(long_text),
+                 round(dl1 * 1e3, 1), "ms single long text"))
+    rows.append((f"sharded.long.mesh{n_dev}dev", len(long_text),
+                 round(dlM * 1e3, 1),
+                 f"ms chunk-sharded ratio={dl1 / max(dlM, 1e-9):.2f}x"))
+
+
 def bench_recognizer(rows, quick):
     from benchmarks.benchmark_res import BIGDATA_RE, make_text_exact
     from repro.core.reference import ParallelArtifacts
@@ -324,6 +391,9 @@ def main(argv=None) -> None:
         "speedup": lambda: bench_speedup(rows, args.quick),
         "batched_throughput": lambda: bench_batched_throughput(rows, args.quick),
         "streaming_append": lambda: bench_streaming_append(
+            rows, args.quick, args.smoke
+        ),
+        "sharded_throughput": lambda: bench_sharded_throughput(
             rows, args.quick, args.smoke
         ),
         "recognizer": lambda: bench_recognizer(rows, args.quick),

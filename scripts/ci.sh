@@ -20,4 +20,12 @@ python -m pytest "${PYTEST_ARGS[@]}"
 # streaming smoke gate: amortized append cost + bit-identity vs cold parse
 python -m benchmarks.run --only streaming_append --smoke
 
+# distributed runtime gate on an 8-device host mesh: the mesh tests run
+# in-process (device count is locked at jax init, hence the fresh
+# interpreters), then the sharded bench's bit-identity smoke
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    python -m pytest tests/test_distributed.py -q -m "not slow"
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    python -m benchmarks.run --only sharded_throughput --smoke
+
 python -m benchmarks.run --quick --only tab5

@@ -174,6 +174,17 @@ class ParserBackend:
         """Lift ``core(N, I, F, (c,k) chunks)`` to a (B, c, k) batch axis."""
         raise NotImplementedError
 
+    def lift_batch(self, fn: Callable) -> Callable:
+        """Lift a single phase body over a leading batch axis (all args).
+
+        The per-phase analogue of ``batch_core``, used where the phases run
+        as separate programs with a batch dim — the distributed batched route
+        maps phase bodies per batch row *inside* ``shard_map``.  vmap by
+        default; backends whose kernels own the device grid override with a
+        sequential ``lax.map``.
+        """
+        return jax.vmap(fn)
+
 
 class JnpBackend(ParserBackend):
     """Pure-jnp phase bodies — vmap everywhere; the reference device program."""
@@ -238,6 +249,11 @@ class PallasBackend(ParserBackend):
         return lambda N, I, F, batch: jax.lax.map(
             lambda ch: core(N, I, F, ch), batch
         )
+
+    def lift_batch(self, fn):
+        # sequential over batch rows: the kernels own the intra-chunk grid and
+        # a vmapped pallas_call would multiply the live VMEM working set
+        return lambda *args: jax.lax.map(lambda a: fn(*a), args)
 
 
 _BACKENDS: Dict[str, Type[ParserBackend]] = {}

@@ -46,6 +46,15 @@ The runtime is organised in three layers (bottom-up):
                    batched tail execution across sessions, bytes-budget
                    eviction).
 
+  distribution     ``core/distributed.py``'s ``DistributedEngine`` — the
+                   same phase bodies placed over a device mesh: reach and
+                   build&merge shard-local, ONE all-gather of the (c, ℓp, ℓp)
+                   product stack, replicated join.  ``ParserEngine(mesh=...)``
+                   builds it lazily and routes ``parse`` (chunks over every
+                   'chunk' axis) and ``parse_batch`` (batch over 'data' ×
+                   chunks over 'pod') through it; specs resolve via
+                   ``parallel/sharding.py``'s ``MeshRules``.
+
 Mapping from the paper's phases (all validated against ``core/reference.py``,
 the paper-faithful oracle):
 
@@ -71,7 +80,6 @@ word, App. C encoding).
 
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
@@ -81,16 +89,12 @@ import numpy as np
 
 from .backend import (
     ParserBackend,
-    build_merge_chunk,
     get_backend,
     join_entries,
     pack_columns_u32,
-    reach_chunk,
-    semiring_matmul,
     semiring_matvec,
 )
 from .matrices import ParserMatrices, build_matrices, unpack_bits
-from .scan import linear_index
 from .segments import SegmentTable
 from .slpf import SLPF
 
@@ -233,6 +237,8 @@ class ParserEngine:
         lane_pad: int = 32,
         backend: Union[str, ParserBackend] = "jnp",
         min_chunk_len: int = 8,
+        mesh=None,
+        mesh_rules=None,
     ):
         if isinstance(matrices_or_table, SegmentTable):
             matrices = build_matrices(matrices_or_table)
@@ -244,9 +250,12 @@ class ParserEngine:
         lane_pad = max(lane_pad, self.backend.min_lane_pad)
         self.tables = EngineTables.from_matrices(matrices, lane_pad=lane_pad)
         self.min_chunk_len = max(1, min_chunk_len)
+        self.mesh = mesh
+        self.mesh_rules = mesh_rules
 
         self._compile_count = 0
         self._phases: Optional[PhasePrograms] = None
+        self._dist = None
 
         def counted_core(N, I, F, chunks, _core=make_parse_core(self.backend)):
             # Python side effect at trace time: counts compiled programs.
@@ -275,6 +284,19 @@ class ParserEngine:
 
             self._phases = PhasePrograms(self.backend, on_trace=bump)
         return self._phases
+
+    @property
+    def dist(self):
+        """The mesh distribution layer (``core/distributed.py``) when this
+        engine was built with ``mesh=``; None on a single-device engine.
+        Built lazily — a mesh-less engine never imports it."""
+        if self.mesh is None:
+            return None
+        if self._dist is None:
+            from .distributed import DistributedEngine
+
+            self._dist = DistributedEngine(self, self.mesh, rules=self.mesh_rules)
+        return self._dist
 
     def classes_of_text(self, text) -> np.ndarray:
         if isinstance(text, (bytes, str)):
@@ -316,7 +338,12 @@ class ParserEngine:
         path; PAD chunks are identity, so the bucket padding is semantics-free.
         Sharing the batched program means mixing ``parse`` and ``parse_batch``
         compiles one program per bucket, not two.
+
+        On a mesh engine this is the long-text route: the chunk dim shards
+        over EVERY chunk axis ('pod' × 'data').
         """
+        if self.mesh is not None:
+            return self.dist.parse(text, n_chunks=n_chunks)
         return self.parse_batch([text], n_chunks=n_chunks)[0]
 
     def parse_batch(self, texts: Sequence, n_chunks: int = 8) -> List[SLPF]:
@@ -326,7 +353,12 @@ class ParserEngine:
         power-of-two number of batch slots (extra rows are all-PAD and
         discarded), so the set of compiled programs stays small and static —
         at most one per (bucket, batch-slot) shape, reused across calls.
+
+        On a mesh engine the groups run through the distributed batched
+        route instead: batch slots shard over 'data', chunks over 'pod'.
         """
+        if self.mesh is not None:
+            return self.dist.parse_batch(texts, n_chunks=n_chunks)
         classes_list = [self.classes_of_text(t) for t in texts]
         groups: Dict[Tuple[int, int], List[int]] = {}
         for i, cls in enumerate(classes_list):
@@ -361,99 +393,25 @@ class ParserEngine:
 
 
 def resolve_engine(
-    matrices_or_engine, backend: Union[str, ParserBackend, None]
+    matrices_or_engine,
+    backend: Union[str, ParserBackend, None],
+    mesh=None,
+    mesh_rules=None,
 ) -> ParserEngine:
     """Shared constructor contract of everything layered on the engine
     (ParseService, StreamingParser, StreamService): accept matrices / a
     segment table and build an engine, or accept a prebuilt ParserEngine —
-    in which case ``backend=`` must not also be passed."""
+    in which case ``backend=``/``mesh=`` must not also be passed."""
     if isinstance(matrices_or_engine, ParserEngine):
-        if backend is not None:
+        if backend is not None or mesh is not None:
             raise ValueError(
-                "pass backend= only when building the engine here; "
-                "a prebuilt ParserEngine already owns its backend"
+                "pass backend=/mesh= only when building the engine here; "
+                "a prebuilt ParserEngine already owns its backend and mesh"
             )
         return matrices_or_engine
     return ParserEngine(
-        matrices_or_engine, backend=backend if backend is not None else "jnp"
-    )
-
-
-# ----------------------------------------------------- sharded (multi-pod)
-
-
-def sharded_parse_step(
-    N: jnp.ndarray,
-    I: jnp.ndarray,
-    F: jnp.ndarray,
-    local_chunks: jnp.ndarray,
-    axis_names: Sequence[str],
-) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Per-device body (inside shard_map) of the multi-pod parser.
-
-    ``local_chunks``: (f, k) — this device's f fragments.  Phases:
-      reach   local (f chunk products),
-      join    ONE all_gather of (c·f, ℓp, ℓp) summaries + the replicated
-              ``core/scan.py`` exclusive scan (shared with the engine),
-      build&merge local, emitting packed columns.
-    Returns (col0 packed — valid on global chunk 0's device, cols (f, k, W)).
-    """
-    P_local = jax.vmap(lambda ch: reach_chunk(N, ch))(local_chunks)  # (f, ℓp, ℓp)
-    gathered = jax.lax.all_gather(P_local, tuple(axis_names), axis=0, tiled=False)
-    cf = P_local.shape[0]
-    P_all = gathered.reshape((-1,) + P_local.shape[1:])              # (c·f, ℓp, ℓp)
-    Jf_all, Jb_all = join_entries(P_all, I, F)
-
-    sl = linear_index(axis_names) * cf
-    Jf = jax.lax.dynamic_slice_in_dim(Jf_all, sl, cf, 0)
-    Jb = jax.lax.dynamic_slice_in_dim(Jb_all, sl, cf, 0)
-
-    M, beta0 = jax.vmap(lambda ch, ef, eb: build_merge_chunk(N, ch, ef, eb))(
-        local_chunks, Jf, Jb
-    )
-    col0 = I * beta0[0]  # meaningful on the device holding global chunk 0
-    return pack_columns_u32(col0), pack_columns_u32(M)
-
-
-def make_sharded_parser(tables: EngineTables, mesh, axis_names: Sequence[str], frags: int = 1):
-    """Build the jitted multi-device parse program over ``mesh``.
-
-    Input ``chunks``: (c_total·frags, k) int32, sharded over ``axis_names`` on
-    dim 0.  Output columns sharded the same way (SLPF stays distributed; App. C
-    packing applied on device).
-    """
-    from jax.sharding import NamedSharding, PartitionSpec as P
-
-    if hasattr(jax, "shard_map"):  # jax ≥ 0.6
-        _shard_map = functools.partial(jax.shard_map, check_vma=False)
-    else:  # older jax: experimental namespace, check_rep spelling
-        from jax.experimental.shard_map import shard_map as _esm
-
-        _shard_map = functools.partial(_esm, check_rep=False)
-
-    spec_in = P(tuple(axis_names))
-    body = functools.partial(sharded_parse_step, axis_names=tuple(axis_names))
-
-    @functools.partial(
-        _shard_map,
+        matrices_or_engine,
+        backend=backend if backend is not None else "jnp",
         mesh=mesh,
-        in_specs=(P(), P(), P(), spec_in),
-        out_specs=(P(), spec_in),
-        # non-default check flag: scan carries start device-invariant, become varying
+        mesh_rules=mesh_rules,
     )
-    def program(N, I, F, chunks):
-        col0, cols = body(N, I, F, chunks)
-        # col0 from every device; keep chunk-0's via psum of masked values.
-        idx = linear_index(axis_names)
-        col0 = jnp.where(idx == 0, col0, jnp.zeros_like(col0))
-        col0 = jax.lax.psum(col0, tuple(axis_names))
-        return col0, cols
-
-    in_shardings = (
-        NamedSharding(mesh, P()),
-        NamedSharding(mesh, P()),
-        NamedSharding(mesh, P()),
-        NamedSharding(mesh, spec_in),
-    )
-    out_shardings = (NamedSharding(mesh, P()), NamedSharding(mesh, spec_in))
-    return jax.jit(program, in_shardings=in_shardings, out_shardings=out_shardings)

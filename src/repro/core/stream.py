@@ -43,8 +43,15 @@ of the same prefix (the clean SLPF is unique), validated against
 ``snapshot()``/``restore()`` capture/reinstate the whole stream state in
 O(1) device work (products are immutable jax arrays; only class buffers are
 copied).  ``drop_cache()`` releases the device arrays (serving-layer
-eviction); the classes are retained host-side and the cache is rebuilt
-transparently on the next touch.
+eviction) and ``drop_sealed_product(i)`` releases a single chunk's product
+(the serving layer's cost-aware partial eviction); classes are retained
+host-side and the missing products rebuild transparently on the next touch.
+
+On a mesh engine (``ParserEngine(mesh=...)``) the join over the cached
+summaries routes through ``core/distributed.py``: the sealed-product stack
+is exactly the distributed runtime's all-gather payload, so it lives sharded
+over the chunk axes and one collective feeds the replicated join — sharded
+streaming with no streaming-specific distribution code.
 """
 
 from __future__ import annotations
@@ -90,8 +97,10 @@ class StreamingParser:
         backend: Union[str, ParserBackend, None] = None,
         first_seal_len: int = 8,
         max_seal_len: Optional[int] = None,
+        mesh=None,
+        mesh_rules=None,
     ):
-        self.engine = resolve_engine(matrices_or_engine, backend)
+        self.engine = resolve_engine(matrices_or_engine, backend, mesh, mesh_rules)
         self.first_seal_len = _next_pow2(max(1, first_seal_len))
         if max_seal_len is None:
             self.max_seal_len = None
@@ -144,7 +153,11 @@ class StreamingParser:
         it would report phantom bytes eviction cannot free."""
         if self._cold:
             return 0
-        total = sum(int(p.size) * p.dtype.itemsize for p in self._sealed_products)
+        total = sum(
+            int(p.size) * p.dtype.itemsize
+            for p in self._sealed_products
+            if p is not None
+        )
         if self._tail_len:
             total += int(self._tail_product.size) * self._tail_product.dtype.itemsize
         if self._join is not None:
@@ -249,7 +262,14 @@ class StreamingParser:
             return
         t = self.engine.tables
         P, c_real = self._stack_products()
-        Jf, Jb, col0p = self.engine.phases.join(P, t.I, t.F)
+        dist = self.engine.dist
+        if dist is not None:
+            # Sharded streaming: the sealed-product stack IS the distributed
+            # runtime's all-gather payload — shard it over the chunk axes and
+            # run the replicated join there (core/distributed.py contract).
+            Jf, Jb, col0p = dist.join_products(P)
+        else:
+            Jf, Jb, col0p = self.engine.phases.join(P, t.I, t.F)
         self._join = (Jf, Jb, col0p, c_real)
 
     def _joined(self):
@@ -353,13 +373,47 @@ class StreamingParser:
         self._join = None
         self._cold = True
 
+    def sealed_cache_entries(self) -> List[Tuple[int, int, int]]:
+        """(index, chunk_chars, bytes) of each RESIDENT sealed product — the
+        per-product eviction candidates the serving layer ranks (the cost-
+        aware policy drops largest chunks first)."""
+        if self._cold:
+            return []
+        return [
+            (i, len(self._sealed_classes[i]), int(p.size) * p.dtype.itemsize)
+            for i, p in enumerate(self._sealed_products)
+            if p is not None
+        ]
+
+    def drop_sealed_product(self, i: int) -> int:
+        """Release ONE sealed chunk's cached product; returns bytes freed.
+
+        Finer-grained than ``drop_cache``: the join cache and the other
+        products stay resident, and only the dropped chunk re-reaches on the
+        next rebuild.  No-op (0 bytes) when already cold or dropped.
+        """
+        if self._cold or self._sealed_products[i] is None:
+            return 0
+        p = self._sealed_products[i]
+        self._sealed_products[i] = None
+        return int(p.size) * p.dtype.itemsize
+
     def _ensure_cache(self) -> None:
-        if not self._cold:
+        if self._cold:
+            self._cold = False
+            self.rebuilds += 1
+            self._sealed_products = [
+                self._reach_piece(s) for s in self._sealed_classes
+            ]
+            self._tail_product = self._eye
+            if self._tail_len:
+                tail = np.concatenate(self._tail_pieces)
+                self._tail_product = self._reach_piece(tail)
             return
-        self._cold = False
-        self.rebuilds += 1
-        self._sealed_products = [self._reach_piece(s) for s in self._sealed_classes]
-        self._tail_product = self._eye
-        if self._tail_len:
-            tail = np.concatenate(self._tail_pieces)
-            self._tail_product = self._reach_piece(tail)
+        if any(p is None for p in self._sealed_products):
+            # partial eviction: re-reach only the dropped chunks
+            self.rebuilds += 1
+            self._sealed_products = [
+                p if p is not None else self._reach_piece(s)
+                for p, s in zip(self._sealed_products, self._sealed_classes)
+            ]

@@ -61,20 +61,20 @@ def cell_key(arch: str, shape: str, mesh_name: str) -> str:
 
 def run_parser_cell(mesh, mesh_name: str, results: dict) -> None:
     """Dry-run the paper's own workload: chunked parallel parse over the mesh."""
-    from ..core.engine import EngineTables, make_sharded_parser
+    from ..core.engine import ParserEngine
     from ..core.reference import ParallelArtifacts
     from .analysis import analyze_compiled
     from .mesh import mesh_chips
 
     art = ParallelArtifacts.generate("(a|b|ab)+")
-    tables = EngineTables.from_matrices(art.matrices, lane_pad=128)
-    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    eng = ParserEngine(art.matrices, lane_pad=128, mesh=mesh)
+    tables = eng.tables
     chips = mesh_chips(mesh)
-    chunk_rows = int(np.prod([mesh.shape[a] for a in axes]))
+    # single-text route: the chunk dim takes every 'chunk' mesh axis
+    chunk_rows = eng.dist.chunk_devices
     k = 1 << 20  # 1 Mi chars per chunk row
-    prog = make_sharded_parser(tables, mesh, axes)
     t0 = time.time()
-    lowered = jax.jit(prog).lower(
+    lowered = eng.dist.chunk_program.lower(
         tables.N, tables.I, tables.F,
         jax.ShapeDtypeStruct((chunk_rows, k), np.int32),
     )

@@ -45,6 +45,26 @@ def make_host_mesh(shape: Tuple[int, ...] = (1,), axes: Tuple[str, ...] = ("data
     return make_mesh_compat(shape, axes)
 
 
+def make_parse_mesh(*, max_pods: int = 2):
+    """('pod', 'data') host mesh over every available device — the distributed
+    parser's test/bench shape (chunks over 'pod', batch over 'data').
+
+    Uses ``max_pods`` pods when the device count divides evenly, else a single
+    pod; a 1-device host degenerates to a (1, 1) mesh (the sharded programs
+    still run, with no collectives resident)."""
+    n = len(jax.devices())
+    pods = max_pods if n >= max_pods and n % max_pods == 0 else 1
+    return make_mesh_compat((pods, n // pods), ("pod", "data"))
+
+
+def mesh_axes_size(mesh, axes) -> int:
+    """Product of the named mesh axes' sizes (1 for the empty tuple)."""
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return size
+
+
 def mesh_chips(mesh) -> int:
     n = 1
     for s in mesh.devices.shape:

@@ -78,10 +78,32 @@ class MeshRules:
             out.pop()
         return PartitionSpec(*out)
 
+    def resolve_axes(
+        self, name: str, mesh: Optional[Mesh] = None
+    ) -> Tuple[str, ...]:
+        """Flat mesh axes ONE logical axis maps to on ``mesh`` (() = replicated).
+
+        The tuple form of a single-dim ``resolve`` — what collective code
+        (``core/distributed.py``) needs: the axis names to all-gather over and
+        to feed ``linear_index``."""
+        return spec_axes(self.resolve((name,), mesh), 0)
+
     def with_overrides(self, **kw: Axis) -> "MeshRules":
         d = dict(self.rules)
         d.update(kw)
         return MeshRules(rules=d)
+
+
+def spec_axes(spec: PartitionSpec, dim: int) -> Tuple[str, ...]:
+    """Flat mesh axes assigned to one dim of a PartitionSpec.
+
+    Returns () for a replicated dim — including dims past the spec's trimmed
+    trailing Nones, so callers may ask about any tensor dim safely."""
+    entries = tuple(spec)
+    if dim >= len(entries) or entries[dim] is None:
+        return ()
+    e = entries[dim]
+    return (e,) if isinstance(e, str) else tuple(e)
 
 
 def logical_sharding(

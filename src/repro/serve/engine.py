@@ -154,6 +154,7 @@ class ServeEngine:
         done = np.zeros(b, dtype=bool)
         for i in range(max_new):
             lg = np.asarray(logits[:, -1], np.float32)       # (b, V)
+            stuck = None
             if constraint is not None:
                 mask = constraint.delta[states] >= 0          # (b, V)
                 if self.eos_id is not None:
@@ -170,6 +171,12 @@ class ServeEngine:
                     jax.random.gumbel(sub, lg.shape), np.float32
                 )
                 nxt = (lg / temperature + g).argmax(axis=-1).astype(np.int32)
+            if stuck is not None:
+                # an all--inf row argmaxes to token 0 (an arbitrary, possibly
+                # grammar-breaking id); emit EOS — or the -1 sentinel when no
+                # EOS is configured — for stuck rows instead
+                fill = self.eos_id if self.eos_id is not None else -1
+                nxt = np.where(stuck, np.int32(fill), nxt)
             if self.eos_id is not None:
                 done |= nxt == self.eos_id
             out[:, i] = nxt

@@ -16,10 +16,15 @@ up to ``max_batch`` — mixed-length traffic aggregates into full batches
 without head-of-line blocking on rare shapes.
 
 Instrumentation (``ParseService.stats``): queue depth (current and peak) and
-per-bucket served-count / batch-count / latency aggregates — the observables
-the ROADMAP's SLO item (p50/p99 targets, deadline-aware admission) builds on.
+per-bucket served-count / batch-count / latency aggregates including p50/p99
+over a sliding sample window — the observables the ROADMAP's SLO item
+(latency targets, deadline-aware admission) builds on.
 ``serve/stream_service.py`` exposes the same stats shape for streaming
 sessions.
+
+Distribution: ``ParseService(..., mesh=...)`` builds a mesh-aware engine, so
+every served bucket runs sharded-batched (batch slots over 'data', chunks
+over 'pod' — ``core/distributed.py``); the scheduling layer is unchanged.
 """
 
 from __future__ import annotations
@@ -35,6 +40,12 @@ from ..core.backend import ParserBackend
 from ..core.engine import resolve_engine
 from ..core.slpf import SLPF
 
+# Per-bucket latency sample window for the p50/p99 estimates: percentiles are
+# exact over the most recent LATENCY_WINDOW served requests (a sorted-window
+# estimator — O(window) memory per bucket, robust to traffic drift, unlike a
+# lossy fixed-size reservoir over all time).
+LATENCY_WINDOW = 512
+
 
 @dataclasses.dataclass
 class BucketStats:
@@ -44,21 +55,33 @@ class BucketStats:
     batches: int = 0
     total_latency_s: float = 0.0
     max_latency_s: float = 0.0
+    window: Deque[float] = dataclasses.field(
+        default_factory=lambda: deque(maxlen=LATENCY_WINDOW)
+    )
 
     def record(self, latency_s: float) -> None:
         self.served += 1
         self.total_latency_s += latency_s
         self.max_latency_s = max(self.max_latency_s, latency_s)
+        self.window.append(latency_s)
 
     @property
     def mean_latency_s(self) -> float:
         return self.total_latency_s / self.served if self.served else 0.0
+
+    def latency_quantile_s(self, q: float) -> float:
+        """Latency quantile (q in [0,100]) over the recent sample window."""
+        if not self.window:
+            return 0.0
+        return float(np.percentile(np.fromiter(self.window, dtype=float), q))
 
     def as_dict(self) -> Dict[str, float]:
         return {
             "served": self.served,
             "batches": self.batches,
             "mean_latency_s": self.mean_latency_s,
+            "p50_latency_s": self.latency_quantile_s(50.0),
+            "p99_latency_s": self.latency_quantile_s(99.0),
             "max_latency_s": self.max_latency_s,
         }
 
@@ -98,8 +121,10 @@ class ParseService:
         backend: Union[str, ParserBackend, None] = None,
         max_batch: int = 8,
         n_chunks: int = 8,
+        mesh=None,
+        mesh_rules=None,
     ):
-        self.engine = resolve_engine(matrices_or_engine, backend)
+        self.engine = resolve_engine(matrices_or_engine, backend, mesh, mesh_rules)
         self.max_batch = max(1, max_batch)
         self.n_chunks = n_chunks
         self._queue: Deque[ParseRequest] = deque()

@@ -17,11 +17,17 @@ join a batch.
               identity products, discarded).  Each product then folds into
               its session's tail with one ``compose``.
   eviction    a bytes-cached budget over all sessions' device caches; when
-              exceeded, the least-recently-touched sessions' caches are
-              dropped (``StreamingParser.drop_cache``) — their classes stay
-              host-side and the cache rebuilds transparently on next touch
-              (counted in ``stats["rebuilds"]``), so eviction trades work,
-              never correctness.
+              exceeded, sealed chunk products are dropped cost-aware —
+              LARGEST-chunk products first (every product frees the same
+              ℓp² bytes, so the largest chunk frees the most cache per
+              retained parse state and is the cheapest per covered byte to
+              re-reach), least-recently-touched session as tie-break —
+              falling back to whole-cache drops
+              (``StreamingParser.drop_cache``) when products alone cannot
+              meet the budget.  Classes stay host-side and missing products
+              rebuild transparently on next touch (counted in
+              ``stats["rebuilds"]``), so eviction trades work, never
+              correctness.
 
 ``stats`` mirrors ``ParseService.stats``: queue depth + per-bucket
 served-count/latency aggregates (bucket key = piece chunk length k).
@@ -80,8 +86,10 @@ class StreamService:
         first_seal_len: int = 8,
         max_seal_len: Optional[int] = None,
         cache_budget_bytes: Optional[int] = None,
+        mesh=None,
+        mesh_rules=None,
     ):
-        self.engine = resolve_engine(matrices_or_engine, backend)
+        self.engine = resolve_engine(matrices_or_engine, backend, mesh, mesh_rules)
         self.max_batch = max(1, max_batch)
         self.first_seal_len = first_seal_len
         self.max_seal_len = max_seal_len
@@ -249,16 +257,39 @@ class StreamService:
         return sum(s.parser.cache_nbytes for s in self._sessions.values())
 
     def _maybe_evict(self) -> None:
-        """Drop LRU sessions' device caches until under the bytes budget."""
+        """Cost-aware eviction until under the bytes budget.
+
+        Every sealed product costs the same ℓp²·4 device bytes, so ranking
+        is purely by recompute economics: drop the LARGEST-chunk products
+        first (one re-reach covers the most text per freed byte — the
+        cheapest product per covered byte to rebuild — and the fewest drops
+        meet the budget), with least-recently-touched session as the
+        tie-break.  When sealed products alone cannot reach the budget, fall
+        back to whole-cache LRU drops (frees tail products and join entries
+        too).  The most recently touched session is never evicted.
+        """
         if self.cache_budget_bytes is None:
             return
         total = self.bytes_cached       # summed once; decremented per evict
         if total <= self.cache_budget_bytes:
             return
         by_lru = sorted(self._sessions.values(), key=lambda s: s.last_touch)
-        for s in by_lru[:-1]:            # never evict the most recent session
+        victims = by_lru[:-1]            # never evict the most recent session
+        candidates = [                   # (-chunk_chars, lru_rank, idx, ...)
+            (-chars, rank, idx, nbytes, s)
+            for rank, s in enumerate(victims)
+            for idx, chars, nbytes in s.parser.sealed_cache_entries()
+        ]
+        candidates.sort(key=lambda cand: cand[:3])
+        for _, _, idx, nbytes, s in candidates:
             if total <= self.cache_budget_bytes:
-                break
+                return
+            s.parser.drop_sealed_product(idx)
+            total -= nbytes
+            self.evictions += 1
+        for s in victims:                # fallback: whole-cache LRU drops
+            if total <= self.cache_budget_bytes:
+                return
             freed = s.parser.cache_nbytes
             if freed == 0:
                 continue

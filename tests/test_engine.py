@@ -1,8 +1,6 @@
-"""JAX parallel engine (core/engine.py) vs serial oracle; sharded path."""
+"""JAX parallel engine (core/engine.py) vs serial oracle.
 
-import subprocess
-import sys
-from pathlib import Path
+The distributed (mesh) path lives in tests/test_distributed.py."""
 
 import numpy as np
 import pytest
@@ -72,47 +70,3 @@ def test_property_engine_equals_serial():
         assert np.array_equal(ref.columns, got.columns)
 
     run()
-
-
-@pytest.mark.slow
-def test_sharded_parser_multidevice_subprocess():
-    """The shard_map program on an 8-device host mesh (separate process —
-    device count is locked at jax init).  Asserts SLPF equality and the
-    expected collective footprint (1 all-gather + 1 all-reduce)."""
-    code = r"""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-import jax, numpy as np, re
-from collections import Counter
-from repro.core.reference import ParallelArtifacts
-from repro.core.serial import parse_serial_matrix
-from repro.core.engine import ParserEngine, make_sharded_parser
-from repro.launch.mesh import make_mesh_compat
-mesh = make_mesh_compat((2, 4), ("pod", "data"))
-art = ParallelArtifacts.generate("(a|b|ab)+")
-eng = ParserEngine(art.matrices)
-prog = make_sharded_parser(eng.tables, mesh, ("pod", "data"))
-for txt in ["abababab", "a"*17, "baab"]:
-    cls = eng.classes_of_text(txt)
-    chunks = eng.pad_chunks(cls, 8)
-    col0, cols = prog(eng.tables.N, eng.tables.I, eng.tables.F, chunks)
-    s = eng._assemble(col0, cols, cls)
-    ref = parse_serial_matrix(art.matrices, txt)
-    assert np.array_equal(s.columns, ref.columns), txt
-txt_hlo = jax.jit(prog).lower(
-    eng.tables.N, eng.tables.I, eng.tables.F,
-    jax.ShapeDtypeStruct((8, 64), np.int32)).compile().as_text()
-c = Counter(re.findall(r"(all-gather|all-reduce|all-to-all|reduce-scatter)", txt_hlo))
-assert c["all-gather"] >= 1 and c["all-reduce"] >= 1, c
-print("SHARDED-OK", dict(c))
-"""
-    env = {"PYTHONPATH": str(Path(__file__).parents[1] / "src"), "PATH": "/usr/bin:/bin"}
-    import os
-
-    env.update({k: v for k, v in os.environ.items() if k not in env})
-    env.pop("XLA_FLAGS", None)
-    out = subprocess.run(
-        [sys.executable, "-c", code], capture_output=True, text=True, env=env, timeout=600
-    )
-    assert out.returncode == 0, out.stderr[-2000:]
-    assert "SHARDED-OK" in out.stdout

@@ -100,6 +100,8 @@ def test_service_stats(art):
     assert sum(v["batches"] for v in st["buckets"].values()) == svc.batches_run
     for v in st["buckets"].values():
         assert 0.0 <= v["mean_latency_s"] <= v["max_latency_s"]
+        # p50/p99 over the sorted sample window — the SLO-item observables
+        assert 0.0 <= v["p50_latency_s"] <= v["p99_latency_s"] <= v["max_latency_s"]
     for req in done:
         assert req.latency_s is not None and req.latency_s >= 0.0
         assert req.bucket is not None

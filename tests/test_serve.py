@@ -54,6 +54,27 @@ def test_constrained_generation_always_matches(setup, seed):
         assert re.fullmatch("(ab|a)*c", s), s
 
 
+def test_dead_end_emits_eos_not_token_zero(setup):
+    """Regression: a constrained row whose mask is all-false used to write
+    ``argmax(-inf) == 0`` (an arbitrary token) into the output; stuck rows
+    must emit EOS instead."""
+    cfg, params = setup
+    art = ParallelArtifacts.generate("ab")
+    # vocab with NO token for 'b': after generating 'a' the row is stuck —
+    # every continuation dead, and the non-final state forbids EOS too
+    vocab = [b"\xff\xff"] * cfg.vocab_size
+    vocab[1] = b"a"
+    tdfa = TokenDFA.from_matrices(art.matrices, vocab)
+    eos_id = 5
+    eng = ServeEngine(cfg, params, max_seq=16, batch=2, eos_id=eos_id)
+    prompts = np.array([[1], [1]], np.int32)
+    res = eng.generate(prompts, max_new=4, temperature=0.0, constraint=tdfa)
+    assert res.tokens.shape == (2, 2)            # stuck at step 2 → early stop
+    assert np.all(res.tokens[:, 0] == 1)         # only 'a' is ever allowed
+    assert np.all(res.tokens[:, 1] == eos_id)    # dead end → EOS, never 0
+    assert not res.accepted.any()                # "a" does not match "ab"
+
+
 def test_unconstrained_generation_shapes(setup):
     cfg, params = setup
     eng = ServeEngine(cfg, params, max_seq=32, batch=3)

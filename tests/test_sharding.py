@@ -7,19 +7,23 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config
 from repro.models.model import abstract_params, param_logical_axes
-from repro.parallel.sharding import MeshRules, adapt_rules_for, divisible
+from repro.parallel.sharding import MeshRules, adapt_rules_for, divisible, spec_axes
 from repro.train.step import map_with_logical, shape_aware_spec
+
+
+def _amesh(shape, axes):
+    # logical mesh structure on 1 real device: use abstract mesh
+    from jax.sharding import AbstractMesh
+
+    try:
+        return AbstractMesh(tuple(shape), tuple(axes))
+    except TypeError:  # jax ≤ 0.4: AbstractMesh(((name, size), ...))
+        return AbstractMesh(tuple(zip(axes, shape)))
 
 
 @pytest.fixture(scope="module")
 def mesh():
-    # logical 16x16 structure on 1 real device: use abstract mesh
-    from jax.sharding import AbstractMesh
-
-    try:
-        return AbstractMesh((16, 16), ("data", "model"))
-    except TypeError:  # jax ≤ 0.4: AbstractMesh(((name, size), ...))
-        return AbstractMesh((("data", 16), ("model", 16)))
+    return _amesh((16, 16), ("data", "model"))
 
 
 def test_resolve_basic(mesh):
@@ -27,6 +31,49 @@ def test_resolve_basic(mesh):
     assert r.resolve(("batch", None, "mlp"), mesh) == P("data", None, "model")
     # axis reuse within one tensor is dropped (specs must be disjoint)
     assert r.resolve(("mlp", "vocab"), mesh) == P("model")
+
+
+def test_resolve_duplicate_axis_dropping_across_dims():
+    """Mesh axes consumed by an earlier dim drop from later dims' rules."""
+    r = MeshRules()
+    m = _amesh((2, 4, 2), ("pod", "data", "model"))
+    # batch takes ('pod','data'); chunk's rule names the same axes → replicated
+    assert r.resolve(("batch", "chunk"), m) == P(("pod", "data"))
+    # restricting batch to 'data' leaves 'pod' for the chunk dim — exactly the
+    # distributed batched-parse composition (batch × chunk sharding)
+    rb = r.with_overrides(batch="data")
+    assert rb.resolve(("batch", "chunk"), m) == P("data", "pod")
+
+
+def test_resolve_absent_axis_filtering_one_axis_mesh():
+    """Axes the mesh lacks are filtered, not errors; all-gone → replicated."""
+    r = MeshRules()
+    m_data = _amesh((8,), ("data",))
+    assert r.resolve(("chunk",), m_data) == P("data")     # 'pod' filtered away
+    assert r.resolve_axes("chunk", m_data) == ("data",)
+    m_model = _amesh((8,), ("model",))
+    assert r.resolve(("chunk",), m_model) == P()          # nothing left
+    assert r.resolve(("batch", "chunk"), m_model) == P()
+    assert r.resolve_axes("chunk", m_model) == ()
+
+
+def test_chunk_rule_across_mesh_shapes():
+    """'chunk' → ('pod','data') resolves per-mesh without rule edits."""
+    r = MeshRules()
+    m3 = _amesh((2, 4, 2), ("pod", "data", "model"))
+    assert r.resolve(("chunk",), m3) == P(("pod", "data"))
+    assert r.resolve_axes("chunk", m3) == ("pod", "data")
+    m2 = _amesh((4, 2), ("data", "model"))
+    assert r.resolve(("chunk",), m2) == P("data")
+    assert r.resolve_axes("chunk", m2) == ("data",)
+
+
+def test_spec_axes_helper():
+    spec = P("data", None, ("pod", "model"))
+    assert spec_axes(spec, 0) == ("data",)
+    assert spec_axes(spec, 1) == ()
+    assert spec_axes(spec, 2) == ("pod", "model")
+    assert spec_axes(spec, 7) == ()                       # past trimmed tail
 
 
 def test_shape_aware_divisibility(mesh):

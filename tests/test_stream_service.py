@@ -79,6 +79,58 @@ def test_eviction_by_bytes_budget_is_exact(art, engine):
     assert svc.stats["rebuilds"] > 0     # evicted sessions rebuilt on touch
 
 
+def test_cost_aware_eviction_order(art, engine):
+    """Largest-chunk sealed products evict first; LRU session breaks ties."""
+    per_product = engine.tables.ell_pad ** 2 * 4
+    svc = StreamService(engine, max_batch=4, first_seal_len=4)
+    text = "ab" * 14                      # 28 chars → sealed chunks 4, 8, 16
+    # touch order a < b < c; c (most recent) is never evicted
+    a, b, c = (svc.open() for _ in range(3))
+    for sid in (a, b, c):
+        svc.append(sid, text)
+    svc.drain()
+
+    def resident_lens(sid):
+        return sorted(
+            chars for _, chars, _ in svc._sessions[sid].parser.sealed_cache_entries()
+        )
+
+    for sid in (a, b, c):
+        assert resident_lens(sid) == [4, 8, 16]
+    # one product over budget → exactly one drop: A's (LRU) largest chunk
+    svc.cache_budget_bytes = svc.bytes_cached - per_product
+    svc._maybe_evict()
+    assert svc.evictions == 1
+    assert resident_lens(a) == [4, 8]
+    assert resident_lens(b) == [4, 8, 16]
+    # next drop: chunk size dominates LRU — B's 16 goes before A's 8
+    svc.cache_budget_bytes = svc.bytes_cached - per_product
+    svc._maybe_evict()
+    assert svc.evictions == 2
+    assert resident_lens(a) == [4, 8]
+    assert resident_lens(b) == [4, 8]
+    assert resident_lens(c) == [4, 8, 16]
+    # partial eviction trades work, never correctness
+    for sid in (a, b, c):
+        got = svc.slpf(sid)
+        ref = parse_serial_matrix(art.matrices, text)
+        assert np.array_equal(got.columns, ref.columns)
+    assert svc.stats["rebuilds"] >= 2
+
+
+def test_eviction_falls_back_to_full_drop(engine):
+    """A budget below what product drops can free forces whole-cache drops."""
+    svc = StreamService(engine, max_batch=4, first_seal_len=4,
+                        cache_budget_bytes=1)
+    a, b = svc.open(), svc.open()
+    svc.append(a, "abab" * 3)
+    svc.append(b, "abab" * 3)
+    svc.drain()
+    # most recent session is never evicted; the LRU one went fully cold
+    assert svc._sessions[a].parser.cache_nbytes == 0
+    assert svc._sessions[b].parser.cache_nbytes > 0
+
+
 def test_stats_shape_and_contents(engine):
     svc = StreamService(engine, max_batch=4, first_seal_len=8)
     a, b = svc.open(), svc.open()
@@ -100,6 +152,8 @@ def test_stats_shape_and_contents(engine):
     for v in st["buckets"].values():
         assert v["mean_latency_s"] >= 0.0
         assert v["max_latency_s"] >= v["mean_latency_s"]
+        # sorted-window percentiles (SLO inputs): ordered and bounded by max
+        assert 0.0 <= v["p50_latency_s"] <= v["p99_latency_s"] <= v["max_latency_s"]
 
 
 def test_steady_state_sessions_never_recompile(art):
