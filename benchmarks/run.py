@@ -18,6 +18,9 @@ machine.  Mapping to the paper:
                             mesh at fixed batch (+ one long chunk-sharded
                             text); run under
                             XLA_FLAGS=--xla_force_host_platform_device_count=8
+  packed_throughput       — bit-packed uint32 backend vs jnp f32 at ℓ=257
+                            states: bit-identity gate + SLPF-path bytes
+                            moved (≥8× cut gate; packing gives 32×)
   recognizer      Fig. 16r — recognition cost (reach+join only)
   memory          App. C   — SLPF bytes/char, packed and compressed
   engine_roofline §Roofline— per-cell terms (from the dry-run JSON)
@@ -323,6 +326,77 @@ def bench_sharded_throughput(rows, quick, smoke=False):
                  f"ms chunk-sharded ratio={dl1 / max(dlM, 1e-9):.2f}x"))
 
 
+def bench_packed_throughput(rows, quick, smoke=False):
+    """Bit-packed uint32 backend vs jnp f32 at production automaton scale.
+
+    Uses the e(k) family (2k+7 segments; Tab. 5) at k=125 → ℓ = 257 ≥ 256
+    states, built WITHOUT the exponential DFA (segments + matrices only), and
+
+      * gates on bit-identity packed vs jnp on a random a/b text (always —
+        the CI smoke invocation is a real gate);
+      * reports SLPF-path bytes moved — the chunk-product boundary that is
+        the reach output, the join input, the streaming cache entry AND the
+        distributed all-gather payload — for both layouts, gating on the
+        acceptance bar (≥ 8× reduction at ℓ ≥ 256; the uint32 packing gives
+        exactly 32×), measured off the real device arrays, plus the packed
+        vs f32 transition-table traffic of one reach step;
+      * times parse on both backends (CPU wall-clock favors the f32 path's
+        BLAS matmuls — the bytes rows are the TPU-relevant signal; VPU
+        word-op throughput needs the real-TPU ROADMAP item).
+    """
+    import jax.numpy as jnp
+
+    from repro.core.engine import ParserEngine
+    from repro.core.matrices import build_matrices
+    from repro.core.segments import compute_segments
+
+    table = compute_segments("(a|b)*a(a|b){125}")
+    m = build_matrices(table)
+    ell = table.n
+    eng_j = ParserEngine(m)
+    eng_p = ParserEngine(m, backend="packed")
+    n = 300 if smoke else (2_000 if quick else 50_000)
+    rng = np.random.default_rng(0)
+    text = bytes(rng.choice([97, 98], size=n))
+
+    base = eng_j.parse(text, n_chunks=8)
+    got = eng_p.parse(text, n_chunks=8)
+    ok = np.array_equal(base.pack(), got.pack())
+    rows.append(("packed.bit_identical", ell, int(ok),
+                 "packed == jnp SLPF (must be 1)"))
+    if not ok:
+        raise SystemExit("packed_throughput: packed backend diverged from jnp")
+
+    # SLPF-path bytes: stacked chunk products from each backend's real reach
+    classes = eng_j.classes_of_text(text)
+    c, k = eng_j.bucket_shape(len(classes), 8)
+    chunks = jnp.asarray(eng_j._pad_to(classes, c, k))
+    P_f32 = eng_j.phases.reach(eng_j.tables.N, chunks)
+    P_pck = eng_p.phases.reach(eng_p.tables.N, chunks)
+    b_f32 = int(P_f32.size) * P_f32.dtype.itemsize
+    b_pck = int(P_pck.size) * P_pck.dtype.itemsize
+    ratio = b_f32 / b_pck
+    rows.append(("packed.product_stack_bytes.f32", ell, b_f32,
+                 f"(c={c}) reach→join boundary / all-gather payload"))
+    rows.append(("packed.product_stack_bytes.packed", ell, b_pck,
+                 f"{ratio:.0f}x fewer bytes moved (gate ≥8x at ℓ≥256)"))
+    if ell >= 256 and ratio < 8.0:
+        raise SystemExit(
+            f"packed_throughput: bytes reduction {ratio:.1f}x < 8x at ℓ={ell}"
+        )
+    # per-step transition-row traffic of the reach loop (N[class] per char)
+    lp = eng_j.tables.ell_pad
+    rows.append(("packed.reach_step_bytes", ell,
+                 f"{lp * lp * 4}->{lp * (lp // 32) * 4}",
+                 "f32 vs packed N-row bytes per reach char"))
+
+    for name, eng in (("jnp", eng_j), ("packed", eng_p)):
+        eng.parse(text, n_chunks=8)            # warm the bucket program
+        dt = _time(lambda: eng.parse(text, n_chunks=8), reps=2)
+        rows.append((f"packed.parse_ms.{name}", n, round(dt * 1e3, 1),
+                     f"ms n={n} compiles={eng.compile_count}"))
+
+
 def bench_recognizer(rows, quick):
     from benchmarks.benchmark_res import BIGDATA_RE, make_text_exact
     from repro.core.reference import ParallelArtifacts
@@ -394,6 +468,9 @@ def main(argv=None) -> None:
             rows, args.quick, args.smoke
         ),
         "sharded_throughput": lambda: bench_sharded_throughput(
+            rows, args.quick, args.smoke
+        ),
+        "packed_throughput": lambda: bench_packed_throughput(
             rows, args.quick, args.smoke
         ),
         "recognizer": lambda: bench_recognizer(rows, args.quick),

@@ -20,9 +20,38 @@ Backends:
     calls run with ``interpret=True`` so tests exercise the real BlockSpecs.
     Chunks and batch rows are driven by ``lax.map`` (the kernels own the
     intra-chunk grid).
+  * ``PackedBackend`` — chunk products as uint32 bit-words (32 segments per
+    lane word); reach / compose / join-combine / build&merge run as OR-AND
+    word ops (``core/matrices.py`` packed semiring) — a 32× bandwidth cut on
+    the SLPF path for large automata.
 
 ``ParserEngine(backend=...)`` selects by name; ``register_backend`` adds new
-ones (bit-packed VPU, GPU, …) without touching the engine.
+ones (GPU, …) without touching the engine.
+
+The product-representation contract
+-----------------------------------
+
+A *chunk product* is an opaque, backend-owned device array; callers
+(``ParserEngine.phases``, ``core/stream.py``'s prefix cache,
+``core/distributed.py``'s all-gather join) may only assume:
+
+  * axis 0 of ``reach``'s output indexes chunks; slicing / restacking /
+    concatenating along it (``P[i]``, ``jnp.stack``, all-gather) is legal,
+    as is measuring ``size * dtype.itemsize`` for cache accounting;
+  * ``compose(later, earlier)`` and ``identity_product(ℓp)`` stay inside the
+    representation (monoid closure); identity products are semantic no-ops
+    in every position of a join stack;
+  * dtype/shape beyond that are backend-private — f32 (ℓp, ℓp) matrices for
+    ``jnp``/``pallas``, uint32 (ℓp, W = ℓp/32) packed target-set rows for
+    ``packed``.  Nothing outside the backend may arithmetic on a product.
+
+The non-product boundaries are fixed across backends: ``join`` consumes a
+(c, …) product stack and returns f32 (c, ℓp) entry vectors {0,1};
+``start_column`` returns the f32 (ℓp,) text-start column; and
+``build_merge_packed`` emits the engine-boundary output format — uint32
+bit-packed SLPF columns (c, k, W), bit-identical across backends.  Those
+fixed f32/u32 seams are what let every route (fused, phase-split,
+streaming, mesh) swap backends without conversion code.
 """
 
 from __future__ import annotations
@@ -32,6 +61,16 @@ from typing import Callable, Dict, Tuple, Type, Union
 import jax
 import jax.numpy as jnp
 
+from .matrices import (
+    pack_bits_jnp,
+    pack_transition_table_jnp,
+    packed_identity,
+    packed_matvec,
+    packed_matvec_T,
+    packed_matvec_T_words,
+    packed_matvec_words,
+    packed_semiring_matmul,
+)
 from .scan import exclusive_entries
 
 
@@ -48,13 +87,12 @@ def semiring_matvec(m: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
 
 
 def pack_columns_u32(cols: jnp.ndarray) -> jnp.ndarray:
-    """(…, ℓp) {0,1} floats → (…, ℓp/32) uint32, little-endian bits."""
-    shape = cols.shape
-    lp = shape[-1]
-    assert lp % 32 == 0
-    bits = cols.reshape(shape[:-1] + (lp // 32, 32)).astype(jnp.uint32)
-    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
-    return jnp.sum(bits * weights, axis=-1, dtype=jnp.uint32)
+    """(…, ℓp) {0,1} floats → (…, ℓp/32) uint32, little-endian bits.
+
+    Engine-boundary alias of the packed semiring's packer — ONE device-side
+    bit layout repo-wide (``core/matrices.py``).
+    """
+    return pack_bits_jnp(cols)
 
 
 # ------------------------------------------------------ jnp phase bodies
@@ -137,16 +175,20 @@ def join_entries(
 class ParserBackend:
     """Swappable implementations of the three phases over EngineTables arrays.
 
-    All arrays use the engine's padded layout: N (A+1, ℓp, ℓp) f32, chunks
-    (c, k) int32, entries (c, ℓp) f32.  ``join`` is shared (scan-based);
-    subclasses provide ``reach`` and ``build_merge`` plus a batching strategy.
+    Table inputs use the engine's padded layout — N (A+1, ℓp, ℓp) f32, chunks
+    (c, k) int32 — while chunk *products* are backend-owned opaque arrays (see
+    the module docstring's product-representation contract).  Entries stay
+    f32 (c, ℓp) and SLPF columns leave ``build_merge_packed`` as uint32 words
+    in every backend.  ``join`` is shared (scan-based); subclasses provide
+    ``reach`` and ``build_merge`` plus a batching strategy, and override the
+    product-touching ops together when they change the representation.
     """
 
     name: str = "abstract"
     min_lane_pad: int = 32   # segment-dim alignment this backend requires
 
     def reach(self, N: jnp.ndarray, chunks: jnp.ndarray) -> jnp.ndarray:
-        """(c, k) chunks → (c, ℓp, ℓp) chunk products."""
+        """(c, k) chunks → stacked chunk products (axis 0 = chunk)."""
         raise NotImplementedError
 
     def compose(self, later: jnp.ndarray, earlier: jnp.ndarray) -> jnp.ndarray:
@@ -159,16 +201,47 @@ class ParserBackend:
         """
         return semiring_matmul(later, earlier)
 
+    def identity_product(self, ell_pad: int, dtype=jnp.float32) -> jnp.ndarray:
+        """The monoid identity in this backend's product representation.
+
+        Used by the streaming tail (empty-product init) and as the semantic
+        no-op pad slot of every join stack (``core/stream.py``,
+        ``core/distributed.py``).
+        """
+        return jnp.eye(ell_pad, dtype=dtype)
+
     def join(
         self, P: jnp.ndarray, I: jnp.ndarray, F: jnp.ndarray
     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Product stack (c, …) + I/F (ℓp,) f32 → f32 (c, ℓp) entries ×2."""
         return join_entries(P, I, F)
+
+    def start_column(
+        self, P: jnp.ndarray, I: jnp.ndarray, Jb0: jnp.ndarray
+    ) -> jnp.ndarray:
+        """Text-start column C₀ = I ∧ (P₀ᵀ Ĵ₀) as an f32 (ℓp,) vector.
+
+        The backward state at text start is recovered from the first chunk's
+        reach product — the only place outside the backend that would
+        otherwise need product arithmetic, so it lives on the contract.
+        """
+        return I * semiring_matvec(P[0].T, Jb0)
 
     def build_merge(
         self, N: jnp.ndarray, chunks: jnp.ndarray, Jf: jnp.ndarray, Jb: jnp.ndarray
     ) -> jnp.ndarray:
         """(c, k) chunks + entries → (c, k, ℓp) clean columns."""
         raise NotImplementedError
+
+    def build_merge_packed(
+        self, N: jnp.ndarray, chunks: jnp.ndarray, Jf: jnp.ndarray, Jb: jnp.ndarray
+    ) -> jnp.ndarray:
+        """(c, k) chunks + entries → (c, k, W) uint32 bit-packed clean columns.
+
+        The engine-boundary output format (identical across backends);
+        word-native backends override it to emit packed columns directly.
+        """
+        return pack_columns_u32(self.build_merge(N, chunks, Jf, Jb))
 
     def batch_core(self, core: Callable) -> Callable:
         """Lift ``core(N, I, F, (c,k) chunks)`` to a (B, c, k) batch axis."""
@@ -256,6 +329,117 @@ class PallasBackend(ParserBackend):
         return lambda *args: jax.lax.map(lambda a: fn(*a), args)
 
 
+class PackedBackend(ParserBackend):
+    """Bit-packed uint32 phase bodies — OR-AND word ops on the VPU path.
+
+    Chunk products are (ℓp, W = ℓp/32) uint32 packed target-set rows (the
+    ``pack_transition_table`` orientation; see ``core/matrices.py``'s packed
+    semiring).  Reach, compose, and the join's scan combine run as word
+    AND/OR/shift — ℓp³/32 word ops and ℓp²/8 product bytes vs the f32
+    layout's ℓp³ MACs and 4ℓp² bytes — and build&merge scans packed state
+    words end-to-end, emitting the packed SLPF columns with no unpack pass.
+    The padded f32 tables (N, I, F) are packed *inside* the jitted phase
+    bodies, so every entry point keeps the engine's table layout; entries
+    crossing phase boundaries stay f32 per the module contract.  The in-jit
+    table packing costs O((A+1)·ℓp²) bit-gathers per call — ≤ ~(A+1)/k of
+    the reach work, bounded because chunk buckets floor at
+    ``ParserEngine.min_chunk_len`` (8) — the price of keeping one table
+    layout at every boundary; a table-resident packed N belongs to the
+    real-TPU tuning item (ROADMAP).
+
+    ``kernel=True`` routes reach through the Pallas packed OR-AND kernel
+    (``kernels/packed_reach.py``; interpret mode off-TPU) instead of the
+    XLA word ops — the TPU-experiment path, bit-identical by test.
+    """
+
+    name = "packed"
+    min_lane_pad = 32   # exact uint32 word packing needs ℓp % 32 == 0
+
+    def __init__(self, kernel: bool = False, interpret: Union[bool, None] = None):
+        self.kernel = kernel
+        self.interpret = interpret
+
+    def reach(self, N, chunks):
+        Np = pack_transition_table_jnp(N)            # (A+1, ℓp, W)
+        if self.kernel:
+            from ..kernels.ops import use_interpret
+            from ..kernels.packed_reach import packed_reach_chunk_product
+
+            interp = use_interpret() if self.interpret is None else self.interpret
+            return jax.lax.map(
+                lambda ch: packed_reach_chunk_product(Np, ch, interpret=interp),
+                chunks,
+            )
+        eye = packed_identity(N.shape[-1])
+
+        def one(chunk):
+            def step(Q, cls):
+                return packed_semiring_matmul(Np[cls], Q), None
+
+            Q, _ = jax.lax.scan(step, eye, chunk)
+            return Q
+
+        return jax.vmap(one)(chunks)
+
+    def compose(self, later, earlier):
+        return packed_semiring_matmul(later, earlier)
+
+    def identity_product(self, ell_pad, dtype=jnp.float32):
+        return packed_identity(ell_pad)
+
+    def join(self, P, I, F):
+        Jf = exclusive_entries(
+            combine=packed_semiring_matmul,
+            act=packed_matvec,
+            summaries=P,
+            init=I,
+        )
+        Jb_rev = exclusive_entries(
+            combine=lambda later, earlier: packed_semiring_matmul(earlier, later),
+            act=packed_matvec_T,                     # transpose is free packed
+            summaries=P[::-1],
+            init=F,
+        )
+        return Jf, Jb_rev[::-1]
+
+    def start_column(self, P, I, Jb0):
+        return I * packed_matvec_T(P[0], Jb0)
+
+    def build_merge_packed(self, N, chunks, Jf, Jb):
+        Np = pack_transition_table_jnp(N)
+
+        def one(chunk, ef, eb):
+            def fstep(vp, cls):
+                nvp = packed_matvec_words(Np[cls], vp)
+                return nvp, nvp
+
+            _, fwd = jax.lax.scan(fstep, pack_bits_jnp(ef), chunk)
+
+            ebp = pack_bits_jnp(eb)
+
+            def bstep(vp, cls):
+                nvp = packed_matvec_T_words(Np[cls], vp)
+                return nvp, nvp
+
+            _, bwd_rev = jax.lax.scan(bstep, ebp, chunk[::-1])
+            bwd = bwd_rev[::-1]                      # β₀ … β_{k-1} packed words
+            # merge: M[t] = fwd[t] ∧ β_{t+1};  β_k = entry_b — one word-AND
+            bwd_next = jnp.concatenate([bwd[1:], ebp[None]], axis=0)
+            return fwd & bwd_next                    # (k, W) packed columns
+
+        return jax.vmap(one)(chunks, Jf, Jb)
+
+    def build_merge(self, N, chunks, Jf, Jb):
+        from .matrices import unpack_bits_jnp
+
+        return unpack_bits_jnp(
+            self.build_merge_packed(N, chunks, Jf, Jb), N.shape[-1]
+        )
+
+    def batch_core(self, core):
+        return jax.vmap(core, in_axes=(None, None, None, 0))
+
+
 _BACKENDS: Dict[str, Type[ParserBackend]] = {}
 
 
@@ -266,6 +450,7 @@ def register_backend(cls: Type[ParserBackend]) -> Type[ParserBackend]:
 
 register_backend(JnpBackend)
 register_backend(PallasBackend)
+register_backend(PackedBackend)
 
 
 def get_backend(backend: Union[str, ParserBackend]) -> ParserBackend:

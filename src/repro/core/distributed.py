@@ -12,14 +12,18 @@ The product-stack all-gather contract
 -------------------------------------
 
 All cross-device structure flows through ONE array: the stacked chunk
-products ``P`` with shape (c, ℓp, ℓp).  The contract, shared by all three
-routes and by the streaming prefix cache:
+products ``P`` — axis 0 indexes chunks; the per-chunk payload is the
+backend's opaque product representation ((ℓp, ℓp) f32 for jnp/pallas,
+(ℓp, W = ℓp/32) uint32 words for packed, which cuts the collective's bytes
+32×).  The contract, shared by all three routes and by the streaming
+prefix cache:
 
   1. reach runs shard-local — each device folds only its own chunk rows into
      products (no communication);
   2. the product stack is all-gathered over the chunk mesh axes, in
-     ``linear_index`` order, giving every device the full (c, ℓp, ℓp) stack —
-     O(c·ℓp²) bytes of collective traffic, independent of the text length;
+     ``linear_index`` order, giving every device the full (c, …) stack —
+     O(c · product-bytes) of collective traffic, independent of the text
+     length;
   3. the join (``core/scan.py`` ``exclusive_entries``, the same scan the
      Mamba-2 SSD state passing uses) runs replicated on the gathered stack,
      yielding forward/backward entries for every chunk plus the packed text-
@@ -67,7 +71,6 @@ from jax.sharding import NamedSharding, PartitionSpec
 
 from ..launch.mesh import mesh_axes_size
 from ..parallel.sharding import MeshRules, spec_axes
-from .backend import pack_columns_u32
 from .engine import _next_pow2, join_with_col0, resolve_engine
 from .scan import linear_index
 from .slpf import SLPF
@@ -177,8 +180,8 @@ class DistributedEngine:
             start = linear_index(axes) * f
             Jf_loc = jax.lax.dynamic_slice_in_dim(Jf, start, f, 0)
             Jb_loc = jax.lax.dynamic_slice_in_dim(Jb, start, f, 0)
-            M = backend.build_merge(N, chunks, Jf_loc, Jb_loc)
-            return col0p, pack_columns_u32(M)
+            M = backend.build_merge_packed(N, chunks, Jf_loc, Jb_loc)
+            return col0p, M
 
         program = _shard_map()(
             body,
@@ -223,10 +226,10 @@ class DistributedEngine:
             Jf_loc = jax.lax.dynamic_slice_in_dim(Jf, start, f, 1)
             Jb_loc = jax.lax.dynamic_slice_in_dim(Jb, start, f, 1)
             bm_b = backend.lift_batch(
-                lambda ch, ef, eb: backend.build_merge(N, ch, ef, eb)
+                lambda ch, ef, eb: backend.build_merge_packed(N, ch, ef, eb)
             )
-            M = bm_b(batch, Jf_loc, Jb_loc)               # (B_loc, c_loc, k, ℓp)
-            return col0p, pack_columns_u32(M)
+            M = bm_b(batch, Jf_loc, Jb_loc)               # (B_loc, c_loc, k, W)
+            return col0p, M
 
         program = _shard_map()(
             body,
@@ -291,7 +294,7 @@ class DistributedEngine:
         c = int(P.shape[0])
         c_pad = _round_up(max(c, 1), self.chunk_devices)
         if c_pad != c:
-            eye = jnp.eye(t.ell_pad, dtype=P.dtype)
+            eye = self.engine.backend.identity_product(t.ell_pad, dtype=t.N.dtype)
             P = jnp.concatenate(
                 [P, jnp.broadcast_to(eye, (c_pad - c,) + eye.shape)], axis=0
             )

@@ -32,11 +32,11 @@ The runtime is organised in three layers (bottom-up):
                    scheduler).
 
   phase programs   ``ParserEngine.phases`` — the same three phases as
-                   separately-jitted programs whose boundaries (the
-                   (c, ℓp, ℓp) chunk products P_i and the join entries) are
-                   first-class, cacheable arrays instead of fused
-                   intermediates.  This is the seam the streaming layer
-                   caches across calls.
+                   separately-jitted programs whose boundaries (the stacked
+                   chunk products P_i — backend-owned representation — and
+                   the join entries) are first-class, cacheable arrays
+                   instead of fused intermediates.  This is the seam the
+                   streaming layer caches across calls.
 
   stream layer     ``core/stream.py``'s ``StreamingParser`` — a persistent
                    prefix cache of sealed chunk products + a mutable tail;
@@ -48,8 +48,8 @@ The runtime is organised in three layers (bottom-up):
 
   distribution     ``core/distributed.py``'s ``DistributedEngine`` — the
                    same phase bodies placed over a device mesh: reach and
-                   build&merge shard-local, ONE all-gather of the (c, ℓp, ℓp)
-                   product stack, replicated join.  ``ParserEngine(mesh=...)``
+                   build&merge shard-local, ONE all-gather of the stacked
+                   chunk products, replicated join.  ``ParserEngine(mesh=...)``
                    builds it lazily and routes ``parse`` (chunks over every
                    'chunk' axis) and ``parse_batch`` (batch over 'data' ×
                    chunks over 'pod') through it; specs resolve via
@@ -92,7 +92,6 @@ from .backend import (
     get_backend,
     join_entries,
     pack_columns_u32,
-    semiring_matvec,
 )
 from .matrices import ParserMatrices, build_matrices, unpack_bits
 from .segments import SegmentTable
@@ -148,10 +147,13 @@ def join_with_col0(backend: ParserBackend, P, I, F):
     """Join phase over stacked products, plus the packed text-start column.
 
     C_0 = I ∧ β_0 with β_0 = P_0ᵀ Ĵ_0 — the backward state at text start,
-    recovered from the reach products (no extra backward pass).
+    recovered from the reach products (no extra backward pass).  ``P`` is the
+    backend's opaque product stack; the product arithmetic lives behind
+    ``backend.start_column`` so representations (f32 matrices, packed words)
+    never leak here.
     """
-    Jf, Jb = backend.join(P, I, F)                       # (c, ℓp) each
-    col0 = I * semiring_matvec(P[0].T, Jb[0])
+    Jf, Jb = backend.join(P, I, F)                       # (c, ℓp) f32 each
+    col0 = backend.start_column(P, I, Jb[0])
     return Jf, Jb, pack_columns_u32(col0)
 
 
@@ -165,10 +167,9 @@ def make_parse_core(backend: ParserBackend):
     """
 
     def parse_core(N, I, F, chunks):
-        P = backend.reach(N, chunks)                     # (c, ℓp, ℓp)
+        P = backend.reach(N, chunks)                     # (c, …) products
         Jf, Jb, col0p = join_with_col0(backend, P, I, F)
-        M = backend.build_merge(N, chunks, Jf, Jb)       # (c, k, ℓp)
-        return col0p, pack_columns_u32(M)
+        return col0p, backend.build_merge_packed(N, chunks, Jf, Jb)  # (c, k, W)
 
     return parse_core
 
@@ -180,18 +181,21 @@ class PhasePrograms:
     program (best for cold batch parsing), these programs expose every phase
     boundary as a first-class array contract:
 
-      reach        (N, (c, k) chunks)        → (c, ℓp, ℓp) chunk products P_i
+      reach        (N, (c, k) chunks)        → (c, …) chunk products P_i
       compose      (later P, earlier P)      → later ⊗ earlier (one product)
-      join         (P (c, ℓp, ℓp), I, F)     → (Jf, Jb, packed C_0)
+      join         (P (c, …), I, F)          → (Jf, Jb, packed C_0)
       build_merge  (N, chunks, Jf, Jb)       → (c, k, W) packed clean columns
 
-    The products and entries crossing these seams are plain device arrays a
-    caller may cache, slice, restack, and feed back in — the contract the
-    streaming prefix cache (``core/stream.py``) is built on, and the same
-    seam sharded-batched execution and bit-packed backends plug into.  Each
-    program re-traces once per input shape, so callers that bucket their
-    shapes (power-of-two chunk lengths / product counts) keep the compiled
-    set bounded exactly like the fused path.
+    The products crossing these seams are *backend-owned opaque* device
+    arrays (f32 (ℓp, ℓp) matrices for jnp/pallas, uint32 (ℓp, W) words for
+    packed — see ``core/backend.py``'s contract); callers may cache, slice
+    along axis 0, restack, and feed them back in, never arithmetic on them.
+    Entries and packed columns are fixed f32/u32 layouts.  This is the
+    contract the streaming prefix cache (``core/stream.py``) is built on,
+    and the same seam sharded-batched execution plugs into.  Each program
+    re-traces once per input shape, so callers that bucket their shapes
+    (power-of-two chunk lengths / product counts) keep the compiled set
+    bounded exactly like the fused path.
     """
 
     def __init__(self, backend: ParserBackend, on_trace: Optional[Callable] = None):
@@ -211,7 +215,7 @@ class PhasePrograms:
 
         def _build_merge(N, chunks, Jf, Jb):
             notify()
-            return pack_columns_u32(backend.build_merge(N, chunks, Jf, Jb))
+            return backend.build_merge_packed(N, chunks, Jf, Jb)
 
         self.backend = backend
         self.reach = jax.jit(_reach)

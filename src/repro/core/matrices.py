@@ -111,3 +111,136 @@ def boolean_matmul(a: np.ndarray, b: np.ndarray) -> np.ndarray:
 
 def boolean_matvec(mat: np.ndarray, vec: np.ndarray) -> np.ndarray:
     return (mat.astype(np.uint8) @ vec.astype(np.uint8)) > 0
+
+
+# ------------------------------------------------- jnp-side packed semiring
+#
+# Device-side (jit-traceable) counterparts of pack_bits/unpack_bits plus the
+# Boolean OR-AND semiring evaluated directly on uint32 words — the compute
+# layer of the "packed" ParserBackend (core/backend.py).
+#
+# Packed-matrix representation (the pack_transition_table orientation): a
+# {0,1} matrix M (ℓp, ℓp) is stored as Q (ℓp, W) uint32 with W = ℓp/32 and
+# bit b of Q[col, w] equal to M[32·w + b, col] — row ``col`` of Q is the
+# packed *target* set of source segment ``col`` (little-endian bits along
+# the row/target dim).  Every op below is pure word arithmetic (AND / OR /
+# shift): a packed matmul is ℓp²·W word ops vs ℓp³ f32 MACs, and a packed
+# product moves ℓp·W·4 = ℓp²/8 bytes vs ℓp²·4 — the 32× bandwidth cut on
+# the SLPF path.
+
+import jax
+import jax.numpy as jnp
+
+_WORD = 32
+_SHIFTS = np.arange(_WORD, dtype=np.uint32)
+
+
+def _or_reduce(x: jnp.ndarray, axis: int) -> jnp.ndarray:
+    """Bitwise-OR reduction along ``axis`` (uint32)."""
+    axis = axis % x.ndim
+    return jax.lax.reduce(x, jnp.uint32(0), jax.lax.bitwise_or, (axis,))
+
+
+def pack_bits_jnp(bits: jnp.ndarray) -> jnp.ndarray:
+    """(…, ℓp) {0,1} numeric → (…, ℓp/32) uint32 along the last axis.
+
+    Device-side twin of :func:`pack_bits` (last axis only, ℓp % 32 == 0);
+    bit-identical to the numpy packer and to ``backend.pack_columns_u32``.
+    """
+    n = bits.shape[-1]
+    assert n % _WORD == 0, f"packed dim {n} must be a multiple of 32"
+    r = bits.reshape(bits.shape[:-1] + (n // _WORD, _WORD)).astype(jnp.uint32)
+    return _or_reduce(r << jnp.asarray(_SHIFTS), axis=-1)
+
+
+def unpack_bits_jnp(packed: jnp.ndarray, n: int) -> jnp.ndarray:
+    """(…, W) uint32 → (…, n) f32 {0,1} along the last axis (inverse pack)."""
+    bits = (packed[..., :, None] >> jnp.asarray(_SHIFTS)) & jnp.uint32(1)
+    flat = bits.reshape(packed.shape[:-1] + (-1,))
+    return flat[..., :n].astype(jnp.float32)
+
+
+def pack_transition_table_jnp(N: jnp.ndarray) -> jnp.ndarray:
+    """(…, ℓp, ℓp) {0,1} → (…, ℓp, W) uint32 packed along the row (target) dim.
+
+    Device-side twin of :func:`pack_transition_table`: ``out[…, col]`` is the
+    packed target set of source ``col`` — the packed-matrix representation of
+    each leading-dim matrix.
+    """
+    return pack_bits_jnp(jnp.swapaxes(N, -1, -2))
+
+
+def packed_identity(ell_pad: int) -> jnp.ndarray:
+    """Packed identity matrix (ℓp, W): bit ``j`` set in row ``j``."""
+    assert ell_pad % _WORD == 0
+    j = jax.lax.broadcasted_iota(jnp.uint32, (ell_pad, ell_pad // _WORD), 0)
+    w = jax.lax.broadcasted_iota(jnp.uint32, (ell_pad, ell_pad // _WORD), 1)
+    return jnp.where(j // _WORD == w, jnp.uint32(1) << (j % _WORD), jnp.uint32(0))
+
+
+def packed_semiring_matmul(later: jnp.ndarray, earlier: jnp.ndarray) -> jnp.ndarray:
+    """OR-AND product ``later ⊗ earlier`` of packed matrices (…, ℓp, W).
+
+    Column j of the result is the OR of ``later``'s rows selected by the set
+    bits of ``earlier``'s column j:  Qc[j] = OR_k bit_k(Qe[j]) · Ql[k].  The
+    contraction runs as a scan over 32-bit word blocks of k, so the live
+    intermediate is (…, ℓp, 32, W) words = one f32 matrix's worth, never ℓp³.
+    Leading batch dims broadcast like ``matmul`` (``associative_scan`` calls
+    its combine on stacked blocks).
+    """
+    lp, W = later.shape[-2:]
+    later, earlier = jnp.broadcast_arrays(later, earlier)
+    batch = later.shape[:-2]
+    blocks = later.reshape(batch + (W, _WORD, W))     # rows, k-word-grouped
+    # scan over the k word-blocks: put that axis first
+    words_seq = jnp.moveaxis(earlier, -1, 0)          # (W, …, ℓp)
+    blocks_seq = jnp.moveaxis(blocks, -3, 0)          # (W, …, 32, W)
+
+    def body(acc, xs):
+        words, block = xs                             # (…, ℓp) · (…, 32, W)
+        bits = (words[..., None] >> jnp.asarray(_SHIFTS)) & jnp.uint32(1)
+        mask = jnp.uint32(0) - bits                   # {0, 0xFFFFFFFF}
+        sel = mask[..., :, None] & block[..., None, :, :]   # (…, ℓp, 32, W)
+        return acc | _or_reduce(sel, axis=-2), None
+
+    acc0 = jnp.zeros(batch + (lp, W), jnp.uint32)
+    acc, _ = jax.lax.scan(body, acc0, (words_seq, blocks_seq))
+    return acc
+
+
+def _select_or(Q: jnp.ndarray, bits: jnp.ndarray) -> jnp.ndarray:
+    """OR of ``Q``'s rows (ℓp, W) selected by ``bits`` (ℓp,) {0,1} → (W,)."""
+    mask = jnp.uint32(0) - bits.astype(jnp.uint32)
+    return _or_reduce(mask[:, None] & Q, axis=0)
+
+
+def packed_matvec(Q: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """``M v`` with packed M: {0,1} f32 v (ℓp,) → {0,1} f32 (ℓp,).
+
+    out = OR of the packed target rows whose source bit is set in v — the
+    masked OR-reduction form of ``boolean_matvec`` (module docstring).
+    """
+    return unpack_bits_jnp(_select_or(Q, v > 0.5), Q.shape[0])
+
+
+def packed_matvec_words(Q: jnp.ndarray, vp: jnp.ndarray) -> jnp.ndarray:
+    """``M v`` staying packed: words vp (W,) → words (W,)."""
+    bits = ((vp[:, None] >> jnp.asarray(_SHIFTS)) & jnp.uint32(1)).reshape(-1)
+    return _select_or(Q, bits)
+
+
+def packed_matvec_T(Q: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """``Mᵀ v`` with packed M: out[col] = 1 iff v hits any target of col.
+
+    One AND + OR-reduce per row: out[col] = any(Q[col] & pack(v)) — the
+    transposed mat-vec is *free* on the packed layout (no transpose pass).
+    """
+    vp = pack_bits_jnp(v)
+    hits = _or_reduce(Q & vp[None, :], axis=1) != 0      # (ℓp,) bool
+    return hits.astype(jnp.float32)
+
+
+def packed_matvec_T_words(Q: jnp.ndarray, vp: jnp.ndarray) -> jnp.ndarray:
+    """``Mᵀ v`` staying packed: words vp (W,) → words (W,)."""
+    hits = _or_reduce(Q & vp[None, :], axis=1) != 0      # (ℓp,) bool
+    return pack_bits_jnp(hits)

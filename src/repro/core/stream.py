@@ -109,7 +109,9 @@ class StreamingParser:
             floored = 1 << (max(1, max_seal_len).bit_length() - 1)
             self.max_seal_len = max(self.first_seal_len, floored)
         t = self.engine.tables
-        self._eye = jnp.eye(t.ell_pad, dtype=t.N.dtype)
+        # the monoid identity in the engine backend's product representation
+        # (f32 eye / packed-word eye) — tail init and join-stack pad slots
+        self._eye = self.engine.backend.identity_product(t.ell_pad, dtype=t.N.dtype)
 
         # prefix cache -----------------------------------------------------
         self._sealed_classes: List[np.ndarray] = []
@@ -204,8 +206,10 @@ class StreamingParser:
         """Fold one already-reached piece into the tail (service fast path).
 
         ``piece`` must fit inside the current seal boundary (``tail_room``);
-        ``product`` is its (ℓp, ℓp) reach product — from ``_reach_piece`` or
-        from a batched reach the serving layer ran across sessions.
+        ``product`` is its reach product *in the engine backend's product
+        representation* (f32 matrix / packed words — opaque per the
+        ``core/backend.py`` contract) — from ``_reach_piece`` or from a
+        batched reach the serving layer ran across sessions.
         """
         if len(piece) > self.tail_room():
             raise ValueError(
@@ -242,7 +246,8 @@ class StreamingParser:
         return chunks
 
     def _stack_products(self) -> Tuple[jnp.ndarray, int]:
-        """Cached products stacked (c_pad, ℓp, ℓp); pad slots are identity.
+        """Cached products stacked (c_pad, …) in the backend's product
+        representation; pad slots are identity.
 
         c_pad = next_pow2(c_real + 1): at least one identity pad, so the
         exclusive forward entries extend one slot past the real chunks and

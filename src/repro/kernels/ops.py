@@ -17,6 +17,7 @@ from typing import Optional
 
 from . import build as _build
 from . import flash_attention as _flash
+from . import packed_reach as _packed_reach
 from . import reach as _reach
 from . import semiring as _semiring
 from . import ssd_chunk as _ssd
@@ -43,6 +44,14 @@ def semiring_matmul(a, b, *, bm: int = 128, bn: int = 128, bk: int = 128):
 @jax.jit
 def reach_chunk_product(N, ids):
     return _reach.reach_chunk_product(N, ids, interpret=use_interpret())
+
+
+@jax.jit
+def packed_reach_chunk_product(Np, ids):
+    """Word-packed chunk product (uint32 OR-AND) — see packed_reach.py."""
+    return _packed_reach.packed_reach_chunk_product(
+        Np, ids, interpret=use_interpret()
+    )
 
 
 @jax.jit
@@ -103,6 +112,7 @@ def ssd_chunk(xdt, cs, B, C, S_prev):
 __all__ = [
     "semiring_matmul",
     "reach_chunk_product",
+    "packed_reach_chunk_product",
     "build_merge_chunk",
     "flash_attention",
     "ssd_chunk",

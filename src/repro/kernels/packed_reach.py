@@ -1,0 +1,99 @@
+"""Packed reach kernel: per-chunk OR-AND chain product on uint32 bit-words.
+
+The word-native twin of ``kernels/reach.py``: computes the chunk product
+``P = N[x_k] ⊗ … ⊗ N[x_1]`` with every matrix in the bit-packed layout of
+``core/matrices.py``'s packed semiring — ``(ℓp, W = ℓp/32)`` uint32 rows,
+row ``col`` holding the packed target set of source ``col``.  One grid step
+per character; the step is pure VPU word arithmetic (AND / OR / shift), no
+MXU involved:
+
+    P'[j] = OR_k bit_k(P[j]) · N_packed[x_t][k]
+
+evaluated as a ``fori_loop`` over 32-bit word blocks of k so the live
+unpacked intermediate is (ℓp, 32, W) words — one f32 matrix's worth of VMEM,
+never ℓp³.
+
+TPU-native structure mirrors the f32 kernel: the chunk's char-class ids are a
+*scalar-prefetch* operand, the BlockSpec index map selects ``N_packed[x_t]``
+per step (the next class's packed rows DMA while the current step computes),
+and the running packed product lives in a VMEM scratch across grid steps.
+The HBM↔VMEM traffic — the bandwidth-bound term of the reach phase — is 32×
+smaller than the f32 kernel's: each step moves ℓp·W·4 = ℓp²/8 bytes of
+transition rows instead of 4ℓp².
+
+Verified in interpret mode on CPU (bit-identical to the jnp packed fold and
+to the f32 oracle); on a real TPU the (ℓp, W) minor dim wants retiling to
+the 128-lane layout for large ℓp — the ROADMAP's TPU benchmarking item.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..core.matrices import packed_identity
+
+_WORD = 32
+
+
+def _packed_reach_kernel(ids_ref, np_ref, out_ref, acc_ref, *, k: int):
+    t = pl.program_id(0)
+    lp, W = acc_ref.shape
+
+    @pl.when(t == 0)
+    def _init():
+        # THE packed identity (plain jnp iota/where — legal in a kernel body)
+        acc_ref[...] = packed_identity(lp)
+
+    block = np_ref[0]                    # (ℓp, W) packed rows of N[x_t]
+    acc = acc_ref[...]                   # (ℓp, W) running packed product
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (1, _WORD), 1)
+
+    def word_block(wk, new):
+        # bits k = 32·wk … 32·wk+31 of every product column
+        words = jax.lax.dynamic_slice_in_dim(acc, wk, 1, 1)          # (ℓp, 1)
+        bits = (words >> shifts) & jnp.uint32(1)                     # (ℓp, 32)
+        mask = jnp.uint32(0) - bits
+        rows = jax.lax.dynamic_slice_in_dim(block, wk * _WORD, _WORD, 0)
+        sel = mask[:, :, None] & rows[None, :, :]                    # (ℓp, 32, W)
+        return new | jax.lax.reduce(
+            sel, jnp.uint32(0), jax.lax.bitwise_or, (1,)
+        )
+
+    acc_ref[...] = jax.lax.fori_loop(0, W, word_block, jnp.zeros_like(acc))
+
+    @pl.when(t == k - 1)
+    def _done():
+        out_ref[...] = acc_ref[...]
+
+
+def packed_reach_chunk_product(
+    Np: jnp.ndarray,         # (A+1, ℓp, W) uint32 packed transition rows
+    ids: jnp.ndarray,        # (k,) int32 char classes of the chunk
+    *,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Packed chunk product (ℓp, W) uint32.  ℓp must equal 32·W."""
+    _, ell, W = Np.shape
+    assert ell == W * _WORD, (Np.shape, "ℓp must be a multiple of 32")
+    k = ids.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(k,),
+        in_specs=[
+            # one (1, ℓp, W) block of packed rows per step, chosen by the ids
+            pl.BlockSpec((1, ell, W), lambda t, ids: (ids[t], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((ell, W), lambda t, ids: (0, 0)),
+        scratch_shapes=[pltpu.VMEM((ell, W), jnp.uint32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_packed_reach_kernel, k=k),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((ell, W), jnp.uint32),
+        interpret=interpret,
+    )(ids, Np)

@@ -25,6 +25,11 @@ sessions.
 Distribution: ``ParseService(..., mesh=...)`` builds a mesh-aware engine, so
 every served bucket runs sharded-batched (batch slots over 'data', chunks
 over 'pod' — ``core/distributed.py``); the scheduling layer is unchanged.
+
+Backends: ``ParseService(..., backend=...)`` plumbs straight to the engine —
+"jnp", "pallas", or the bit-packed "packed" backend (uint32 OR-AND word ops,
+32× less product bandwidth for large automata) serve through the identical
+scheduling layer; ``stats["backend"]`` reports which one is live.
 """
 
 from __future__ import annotations
@@ -212,6 +217,7 @@ class ParseService:
     def stats(self) -> Dict:
         """Queue-depth + per-bucket served/latency aggregates (SLO inputs)."""
         return {
+            "backend": self.engine.backend.name,
             "pending": len(self._queue),
             "peak_queue_depth": self._peak_queue_depth,
             "batches_run": self.batches_run,

@@ -19,9 +19,11 @@ join a batch.
   eviction    a bytes-cached budget over all sessions' device caches; when
               exceeded, sealed chunk products are dropped cost-aware —
               LARGEST-chunk products first (every product frees the same
-              ℓp² bytes, so the largest chunk frees the most cache per
-              retained parse state and is the cheapest per covered byte to
-              re-reach), least-recently-touched session as tie-break —
+              bytes — ℓp²·4 f32, or ℓp²/8 under the packed backend, whose
+              itemized sizes the byte accounting reflects automatically —
+              so the largest chunk frees the most cache per retained parse
+              state and is the cheapest per covered byte to re-reach),
+              least-recently-touched session as tie-break —
               falling back to whole-cache drops
               (``StreamingParser.drop_cache``) when products alone cannot
               meet the budget.  Classes stay host-side and missing products
@@ -259,7 +261,8 @@ class StreamService:
     def _maybe_evict(self) -> None:
         """Cost-aware eviction until under the bytes budget.
 
-        Every sealed product costs the same ℓp²·4 device bytes, so ranking
+        Every sealed product costs the same device bytes (the engine
+        backend's product size — f32 matrix or packed words), so ranking
         is purely by recompute economics: drop the LARGEST-chunk products
         first (one re-reach covers the most text per freed byte — the
         cheapest product per covered byte to rebuild — and the fewest drops
@@ -320,6 +323,7 @@ class StreamService:
         length k) — plus cache/eviction observables for the bytes budget
         (``pending_chars`` carries the char-level backlog)."""
         return {
+            "backend": self.engine.backend.name,
             "sessions": len(self._sessions),
             "pending": self.pending_appends,
             "pending_chars": self.pending_chars,

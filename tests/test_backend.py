@@ -3,12 +3,18 @@
 import numpy as np
 import pytest
 
-from repro.core.backend import JnpBackend, PallasBackend, get_backend, join_entries
+from repro.core.backend import (
+    JnpBackend,
+    PackedBackend,
+    PallasBackend,
+    get_backend,
+    join_entries,
+)
 from repro.core.engine import ParserEngine, _entries_from_products
 from repro.core.reference import ParallelArtifacts, parse_parallel_reference
 from repro.core.serial import parse_serial_matrix
 
-BACKENDS = ["jnp", "pallas"]
+BACKENDS = ["jnp", "pallas", "packed"]
 
 TEXTS = ["", "b", "ba", "abab", "ababab", "a" * 23, "ab" * 40]
 
@@ -26,6 +32,7 @@ def engine(art, request):
 def test_get_backend_resolution():
     assert isinstance(get_backend("jnp"), JnpBackend)
     assert isinstance(get_backend("pallas"), PallasBackend)
+    assert isinstance(get_backend("packed"), PackedBackend)
     b = PallasBackend(interpret=True)
     assert get_backend(b) is b
     with pytest.raises(ValueError, match="unknown parse backend"):
@@ -49,12 +56,13 @@ def test_backend_equivalence_vs_reference(art, engine, c):
 
 
 def test_backends_agree_bit_exactly(art):
-    e_jnp = ParserEngine(art.matrices, backend="jnp")
-    e_pls = ParserEngine(art.matrices, backend="pallas")
+    engines = [ParserEngine(art.matrices, backend=b) for b in BACKENDS]
     for text in TEXTS:
-        a = e_jnp.parse(text, n_chunks=4)
-        b = e_pls.parse(text, n_chunks=4)
-        assert np.array_equal(a.columns, b.columns), text
+        outs = [e.parse(text, n_chunks=4) for e in engines]
+        for e, got in zip(engines[1:], outs[1:]):
+            assert np.array_equal(outs[0].columns, got.columns), (
+                e.backend.name, text,
+            )
 
 
 def test_parse_batch_matches_per_text_parse(art, engine):

@@ -1,0 +1,213 @@
+"""Cross-backend conformance harness: every registered backend, every route.
+
+One check, quantified over the whole system: for a corpus of REs (fixed +
+REgen-random; hypothesis-driven when installed, a fixed seed corpus always)
+and adversarial texts (empty, single-char, seal-boundary lengths, corrupted /
+non-matching, long valid), EVERY backend in the ``core/backend.py`` registry
+must produce bit-identical SLPFs across all four execution routes:
+
+  fused        ``ParserEngine.parse`` (one jitted three-phase program)
+  phase-split  ``ParserEngine.phases`` reach → join → build&merge run as
+               separate programs over first-class boundary arrays
+  streaming    ``core/stream.py`` incremental appends + ``current_slpf``
+  mesh         ``ParserEngine(mesh=...)`` (1-device mesh: the shard_map
+               programs with the product-stack all-gather resident)
+
+and the SLPF's tree set must equal ``tests/oracle.py``'s brute-force LST
+enumeration (checked on oracle-sized texts; longer texts are anchored to the
+serial matrix parser, itself oracle-validated in test_serial.py).
+
+The registry is enumerated at runtime — a newly registered backend joins the
+harness with no test edits.
+"""
+
+import zlib
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from oracle import enumerate_lsts
+from repro.core.backend import _BACKENDS
+from repro.core.engine import ParserEngine
+from repro.core.numbering import number_regex
+from repro.core.reference import ParallelArtifacts
+from repro.core.segments import compute_segments
+from repro.core.serial import parse_serial_matrix
+from repro.core.stream import StreamingParser
+from repro.data.regen import random_regex, sample_string
+from repro.launch.mesh import make_parse_mesh
+
+BACKENDS = sorted(_BACKENDS)
+N_CHUNKS = 4
+FIRST_SEAL = 4
+ORACLE_MAX_LEN = 6          # tree-set compare vs the DFS oracle up to here
+
+FIXED_PATTERNS = ["(ab|a)*", "(a|b|ab)+", "x(yz|y)*z?"]
+RANDOM_SEEDS = [11, 23, 47]
+CORPUS = FIXED_PATTERNS + [f"seed:{s}" for s in RANDOM_SEEDS]
+
+_cache = {}
+
+
+def _artifacts(key):
+    """(art, numbered AST or pattern, a deterministic rng) for one corpus key."""
+    if key not in _cache:
+        if key.startswith("seed:"):
+            rng = np.random.Generator(np.random.Philox(int(key[5:])))
+            ast = random_regex(7, rng)
+            numbered = number_regex(ast)
+            art = ParallelArtifacts.generate(compute_segments(numbered))
+            _cache[key] = (art, numbered, ast)
+        else:
+            numbered = number_regex(key)
+            art = ParallelArtifacts.generate(key)
+            _cache[key] = (art, numbered, None)
+    return _cache[key]
+
+
+def _engine(key, backend, mesh=False):
+    ck = (key, backend, mesh)
+    if ck not in _cache:
+        art, _, _ = _artifacts(key)
+        _cache[ck] = ParserEngine(
+            art.matrices,
+            backend=backend,
+            mesh=make_parse_mesh() if mesh else None,
+        )
+    return _cache[ck]
+
+
+def _adversarial_texts(key):
+    """Deterministic per-RE text set covering the adversarial classes."""
+    _, _, ast = _artifacts(key)
+    rng = np.random.Generator(np.random.Philox(zlib.crc32(key.encode())))
+    if ast is not None:
+        sample = lambda: sample_string(ast, rng, max_rep=3)
+    else:
+        art, _, _ = _artifacts(key)
+        sample = lambda: _sample_from_pattern(key, rng)
+    long = b""
+    while len(long) < 24:
+        long += sample()
+    texts = [
+        b"",                          # empty
+        long[:1],                     # single char (valid prefix byte)
+        b"~",                         # single char outside every alphabet
+        long[:FIRST_SEAL],            # exactly one seal boundary
+        long[: 2 * FIRST_SEAL],       # second boundary
+        long[: 2 * FIRST_SEAL + 1],   # one past it
+        long[:6],                     # oracle-sized
+        long,                         # long valid-ish
+        long[: len(long) // 2] + b"~" + long[len(long) // 2 :],  # corrupted
+    ]
+    return list(dict.fromkeys(texts))
+
+
+def _sample_from_pattern(pattern, rng):
+    from repro.core import regex as rx
+
+    return sample_string(rx.parse_regex(pattern), rng, max_rep=3)
+
+
+def _tree_set(slpf):
+    return {
+        tuple(sid for q in path for sid in slpf.table.segs[q])
+        for path in slpf.iter_trees()
+    }
+
+
+def _phase_split_parse(eng, text):
+    """The phase-boundary route: run reach/join/build&merge as separate
+    programs over first-class boundary arrays, assemble like the engine."""
+    classes = eng.classes_of_text(text)
+    c, k = eng.bucket_shape(len(classes), N_CHUNKS)
+    chunks = jnp.asarray(eng._pad_to(classes, c, k))
+    t = eng.tables
+    P = eng.phases.reach(t.N, chunks)
+    Jf, Jb, col0p = eng.phases.join(P, t.I, t.F)
+    cols = eng.phases.build_merge(t.N, chunks, Jf, Jb)
+    return eng._assemble(np.asarray(col0p), np.asarray(cols), classes)
+
+
+def _stream_parse(eng, text):
+    sp = StreamingParser(eng, first_seal_len=FIRST_SEAL)
+    classes = eng.classes_of_text(text)
+    step, i = 1, 0
+    while i < len(classes):                 # varying piece sizes: 1, 2, 3, …
+        sp.append(classes[i : i + step])
+        i += step
+        step = min(step + 1, 7)
+    return sp.current_slpf()
+
+
+def _check_text(key, backend, text, mesh_engine=None):
+    art, numbered, _ = _artifacts(key)
+    eng = _engine(key, backend)
+    fused = eng.parse(text, n_chunks=N_CHUNKS)
+
+    # anchor: serial matrix parser (oracle-validated) on every text
+    ref = parse_serial_matrix(art.matrices, text)
+    assert np.array_equal(fused.columns, ref.columns), (key, backend, text)
+
+    # brute-force LST oracle on oracle-sized texts
+    if len(text) <= ORACLE_MAX_LEN:
+        oracle = {tuple(l) for l in enumerate_lsts(numbered, text)}
+        assert fused.count_trees() == len(oracle), (key, backend, text)
+        assert _tree_set(fused) == oracle, (key, backend, text)
+
+    # phase-split and streaming routes, bit-identical to fused
+    split = _phase_split_parse(eng, text)
+    assert np.array_equal(split.pack(), fused.pack()), (key, backend, text)
+    streamed = _stream_parse(eng, text)
+    assert np.array_equal(streamed.pack(), fused.pack()), (key, backend, text)
+
+    # mesh route (1-device): same program placed through shard_map
+    if mesh_engine is not None:
+        meshed = mesh_engine.parse(text, n_chunks=N_CHUNKS)
+        assert np.array_equal(meshed.pack(), fused.pack()), (key, backend, text)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("key", CORPUS)
+def test_backend_conformance_corpus(key, backend):
+    """Fixed seed corpus — always runs (hypothesis-free CI images)."""
+    for text in _adversarial_texts(key):
+        _check_text(key, backend, text)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_backend_conformance_mesh_route(backend):
+    """The 1-device-mesh route on a corpus slice (shard_map programs are the
+    expensive part — one pattern exercises the placement for each backend)."""
+    key = CORPUS[1]
+    mesh_engine = _engine(key, backend, mesh=True)
+    for text in _adversarial_texts(key)[:6]:
+        _check_text(key, backend, text, mesh_engine=mesh_engine)
+
+
+def test_backend_conformance_property():
+    """hypothesis-driven REs and texts on top of the fixed corpus."""
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.given(st.sampled_from(RANDOM_SEEDS), st.integers(0, 10_000))
+    @hyp.settings(max_examples=10, deadline=None)
+    def run(re_seed, text_seed):
+        key = f"seed:{re_seed}"
+        _, _, ast = _artifacts(key)
+        rng = np.random.Generator(np.random.Philox(text_seed))
+        text = sample_string(ast, rng, max_rep=3)[:16]
+        if text_seed % 3 == 0 and text:
+            pos = text_seed % len(text)
+            text = text[:pos] + b"~" + text[pos + 1 :]   # corrupt one byte
+        for backend in BACKENDS:
+            _check_text(key, backend, text)
+
+    run()
+
+
+def test_registry_contains_all_three_backends():
+    """The harness quantifies over the registry — pin the expected floor."""
+    assert {"jnp", "pallas", "packed"} <= set(BACKENDS)

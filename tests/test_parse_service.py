@@ -92,6 +92,7 @@ def test_service_stats(art):
     assert svc.stats["peak_queue_depth"] == 4
     done = svc.run()
     st = svc.stats
+    assert st["backend"] == "jnp"        # which phase backend is live
     assert st["pending"] == 0
     assert st["batches_run"] == svc.batches_run >= 2
     assert st["compile_count"] == svc.compile_count
