@@ -24,6 +24,12 @@ machine.  Mapping to the paper:
   recognizer      Fig. 16r — recognition cost (reach+join only)
   memory          App. C   — SLPF bytes/char, packed and compressed
   engine_roofline §Roofline— per-cell terms (from the dry-run JSON)
+
+All parse-RUNTIME access goes through the public facade (``repro.api``:
+``Parser`` / ``ParserConfig`` — the supported surface, see ROADMAP "Public
+API"); only the paper-faithful measurement ORACLES (``core/reference``,
+``core/serial``, REgen) are still imported from their internal modules —
+they are baselines, not the runtime.
 """
 
 from __future__ import annotations
@@ -47,18 +53,14 @@ def _time(fn, reps=3):
 
 
 def bench_tab5(rows):
-    from repro.core.automata import build_dfa, build_medfa, build_nfa
-    from repro.core.segments import compute_segments
+    from repro.api import Parser
 
     for k in range(1, 10):
-        t = compute_segments(f"(a|b)*a(a|b){{{k}}}")
-        nfa = build_nfa(t)
-        dfa = build_dfa(nfa)
-        me = build_medfa(nfa)
-        rows.append(("tab5.segments", k, t.n, "count (2k+7; see EXPERIMENTS §Paper-validation)"))
-        rows.append(("tab5.dfa_states", k, dfa.n_states, f"paper={2**(k+1)+1}"))
-        rows.append(("tab5.medfa_states", k, me.n_states, "count"))
-        rows.append(("tab5.medfa_entries", k, len(me.initial), "=segments (linear in k)"))
+        art = Parser(f"(a|b)*a(a|b){{{k}}}").artifacts
+        rows.append(("tab5.segments", k, art.table.n, "count (2k+7; see EXPERIMENTS §Paper-validation)"))
+        rows.append(("tab5.dfa_states", k, art.dfa.n_states, f"paper={2**(k+1)+1}"))
+        rows.append(("tab5.medfa_states", k, art.medfa.n_states, "count"))
+        rows.append(("tab5.medfa_entries", k, len(art.medfa.initial), "=segments (linear in k)"))
 
 
 def bench_fig20(rows, quick):
@@ -87,31 +89,34 @@ def bench_fig20(rows, quick):
 
 def bench_generation(rows):
     from benchmarks.benchmark_res import BENCHMARKS
-    from repro.core.reference import ParallelArtifacts
+    from repro.api import Parser
 
     for name, pattern in BENCHMARKS.items():
-        dt = _time(lambda: ParallelArtifacts.generate(pattern), reps=3)
-        art = ParallelArtifacts.generate(pattern)
+        # full generation through the facade: matrices + all automata
+        dt = _time(lambda: Parser(pattern).artifacts, reps=3)
+        art = Parser(pattern).artifacts
         rows.append((f"generation.{name}", art.table.n, round(dt * 1e3, 2), "ms (paper 5-29ms)"))
 
 
 def bench_parse_times(rows, quick):
     from benchmarks.benchmark_res import BENCHMARKS, make_text_exact
-    from repro.core.engine import ParserEngine
-    from repro.core.reference import ParallelArtifacts
+    from repro.api import Parser, ParserConfig
     from repro.core.serial import parse_serial_dfa
 
     # NOTE: engine times include the bucketed shape padding (parse rounds the
     # chunk length up to a power of two — up to ~2x cells near a bucket edge),
     # the compile-free steady-state cost a serving deployment actually pays.
+    # Chunk policy is declarative: n_chunks=1 is PaREM's serial split,
+    # n_chunks=8 the chunked one.
     n = 20_000 if quick else 2_000_000
     for name in BENCHMARKS:
-        art = ParallelArtifacts.generate(BENCHMARKS[name])
+        p1 = Parser(ParserConfig(regex=BENCHMARKS[name], n_chunks=1))
+        p8 = Parser(ParserConfig(regex=BENCHMARKS[name], n_chunks=8))
+        art = p1.artifacts
         text = make_text_exact(name, n, seed=1)
-        eng = ParserEngine(art.matrices)
         t_dfa = _time(lambda: parse_serial_dfa(art.matrices, text, art.dfa, art.rdfa, art.nfa), reps=1)
-        t_eng1 = _time(lambda: eng.parse(text, n_chunks=1), reps=2)
-        t_eng8 = _time(lambda: eng.parse(text, n_chunks=8), reps=2)
+        t_eng1 = _time(lambda: p1.parse(text), reps=2)
+        t_eng8 = _time(lambda: p8.parse(text), reps=2)
         rows.append((f"parse.{name}.serial_dfa", len(text), round(t_dfa * 1e3, 1), "ms"))
         rows.append((f"parse.{name}.engine_c1", len(text), round(t_eng1 * 1e3, 1), "ms"))
         rows.append((f"parse.{name}.engine_c8", len(text), round(t_eng8 * 1e3, 1), "ms"))
@@ -161,17 +166,14 @@ def bench_batched_throughput(rows, quick):
     timed repeat calls add none (no per-length or per-call re-jit).
     """
     from benchmarks.benchmark_res import BIGDATA_RE, make_text_exact
-    from repro.core.engine import ParserEngine
-    from repro.core.reference import ParallelArtifacts
+    from repro.api import Parser, ParserConfig
 
     import jax
 
-    art = ParallelArtifacts.generate(BIGDATA_RE)
     # keep targets clear of the pow2 bucket edge: make_text_exact may overshoot
     # by a few records, which at n=2^m would spill one text into the next
     # (double-width) bucket and pollute the timed batch with a straggler.
     n = 240 if quick else 16_000
-    n_chunks = 4
     for backend in ("jnp", "pallas"):
         if backend == "pallas" and not quick and jax.default_backend() != "tpu":
             # full-size interpret-mode grids (k≈4096) take hours on CPU and
@@ -179,17 +181,19 @@ def bench_batched_throughput(rows, quick):
             rows.append(("batched.pallas.skipped", 0, 0,
                          "full pallas bench needs a TPU (interpret too slow)"))
             continue
-        eng = ParserEngine(art.matrices, backend=backend)
+        parser = Parser(ParserConfig(
+            regex=BIGDATA_RE, backend=backend, n_chunks=4, max_batch=64
+        ))
         for batch in (1, 8, 64):
             texts = [
                 make_text_exact("BIGDATA", n - (i % 7), seed=i) for i in range(batch)
             ]
-            eng.parse_batch(texts, n_chunks=n_chunks)   # warm the program cache
-            dt = _time(lambda: eng.parse_batch(texts, n_chunks=n_chunks), reps=2)
+            parser.parse_batch(texts)                   # warm the program cache
+            dt = _time(lambda: parser.parse_batch(texts), reps=2)
             rows.append((
                 f"batched.{backend}.b{batch}", batch,
                 round(batch / max(dt, 1e-9), 1),
-                f"texts/s n~{n} compiles={eng.compile_count}",
+                f"texts/s n~{n} compiles={parser.compile_count}",
             ))
 
 
@@ -205,34 +209,33 @@ def bench_streaming_append(rows, quick, smoke=False):
     exclude one-time bucket compiles (``compiles`` column shows the total).
     """
     from benchmarks.benchmark_res import BIGDATA_RE, make_text_exact
-    from repro.core.engine import ParserEngine
-    from repro.core.reference import ParallelArtifacts
-    from repro.core.stream import StreamingParser
+    from repro.api import Parser, ParserConfig
 
-    art = ParallelArtifacts.generate(BIGDATA_RE)
+    parser = Parser(ParserConfig(regex=BIGDATA_RE))
     n_target = 1_500 if smoke else (12_000 if quick else 400_000)
     step = 50 if smoke else (100 if quick else 1_000)
     text = make_text_exact("BIGDATA", n_target, seed=5)
     n = len(text)
-    eng = ParserEngine(art.matrices)
     checkpoints = sorted({n // 4, n // 2, n})
 
     def stream_pass():
-        sp = StreamingParser(eng)
+        stream = parser.open_stream()
         total, done, nxt, marks = 0.0, 0, 0, []
         for lo in range(0, n, step):
             piece = text[lo : lo + step]
             t0 = time.perf_counter()
-            sp.append(piece)
+            stream.append(piece)
+            stream.accepted              # drain THIS session + O(1) join query
             total += time.perf_counter() - t0
             done += len(piece)
             while nxt < len(checkpoints) and done >= checkpoints[nxt]:
                 marks.append((done, total))
                 nxt += 1
-        return sp, marks
+        return stream, marks
 
-    stream_pass()                        # warm: traces every bucketed shape
-    sp, marks = stream_pass()
+    warm, _ = stream_pass()              # warm: traces every bucketed shape
+    warm.close()
+    stream, marks = stream_pass()
 
     prev_n, prev_t = 0, 0.0
     for cp_n, cp_t in marks:
@@ -242,8 +245,8 @@ def bench_streaming_append(rows, quick, smoke=False):
                      round(win_per_byte * 1e6, 3),
                      "flat across checkpoints => sublinear in prefix"))
         prefix = text[:cp_n]
-        eng.parse(prefix)                # warm this parse bucket
-        t_cold = _time(lambda: eng.parse(prefix), reps=2)
+        parser.parse(prefix)             # warm this parse bucket (same engine)
+        t_cold = _time(lambda: parser.parse(prefix), reps=2)
         per_append = (cp_t - prev_t) / max(win_bytes / step, 1)
         rows.append((f"streaming.reparse_speedup.n{cp_n}", cp_n,
                      round(t_cold / max(per_append, 1e-9), 1),
@@ -252,9 +255,12 @@ def bench_streaming_append(rows, quick, smoke=False):
         prev_n, prev_t = cp_n, cp_t
     rows.append(("streaming.amortized_us_per_byte", n,
                  round(marks[-1][1] / n * 1e6, 3),
-                 f"{step}B appends; compiles={eng.compile_count}; "
-                 f"{sp.n_sealed_chunks} sealed chunks"))
-    ok = np.array_equal(sp.current_slpf().pack(), eng.parse(text).pack())
+                 f"{step}B appends; compiles={parser.compile_count}; "
+                 f"{stream.n_sealed_chunks} sealed chunks"))
+    ok = np.array_equal(
+        stream.result().forest.pack(), parser.parse(text).forest.pack()
+    )
+    stream.close()
     rows.append(("streaming.bit_identical", n, int(ok),
                  "stream SLPF == cold parse (must be 1)"))
     if not ok:
@@ -279,46 +285,48 @@ def bench_sharded_throughput(rows, quick, smoke=False):
     import numpy as np
 
     from benchmarks.benchmark_res import BIGDATA_RE, make_text_exact
-    from repro.core.engine import ParserEngine
-    from repro.core.reference import ParallelArtifacts
-    from repro.launch.mesh import make_parse_mesh
+    from repro.api import Parser, ParserConfig
 
     n_dev = len(jax.devices())
     if n_dev < 2:
         rows.append(("sharded.skipped", n_dev, 0,
                      "needs XLA_FLAGS=--xla_force_host_platform_device_count=8"))
         return
-    art = ParallelArtifacts.generate(BIGDATA_RE)
     n = 200 if smoke else (2_000 if quick else 64_000)
     batch = 8
     texts = [make_text_exact("BIGDATA", n - (i % 5), seed=i) for i in range(batch)]
     long_text = make_text_exact("BIGDATA", 4 * n, seed=99)
 
-    eng1 = ParserEngine(art.matrices)
-    mesh = make_parse_mesh()
-    engM = ParserEngine(art.matrices, mesh=mesh)
+    # distribution is declarative on the facade: mesh=None vs mesh="host"
+    cfg = ParserConfig(regex=BIGDATA_RE, n_chunks=8, max_batch=batch)
+    p1 = Parser(cfg)
+    pM = Parser(cfg.replace(mesh="host"))
+    mesh = pM.engine.mesh
 
-    base = eng1.parse_batch(texts, n_chunks=8)        # warm + reference
-    got = engM.parse_batch(texts, n_chunks=8)
-    ok = all(np.array_equal(g.pack(), b.pack()) for g, b in zip(got, base))
+    base = p1.parse_batch(texts)                      # warm + reference
+    got = pM.parse_batch(texts)
+    ok = all(
+        np.array_equal(g.forest.pack(), b.forest.pack())
+        for g, b in zip(got, base)
+    )
     ok = ok and np.array_equal(
-        engM.parse(long_text).pack(), eng1.parse(long_text).pack()
+        pM.parse(long_text).forest.pack(), p1.parse(long_text).forest.pack()
     )
     rows.append(("sharded.bit_identical", n_dev, int(ok),
                  "mesh == 1-device SLPF (must be 1)"))
     if not ok:
         raise SystemExit("sharded_throughput: mesh parse diverged from 1-device")
 
-    dt1 = _time(lambda: eng1.parse_batch(texts, n_chunks=8), reps=2)
-    dtM = _time(lambda: engM.parse_batch(texts, n_chunks=8), reps=2)
+    dt1 = _time(lambda: p1.parse_batch(texts), reps=2)
+    dtM = _time(lambda: pM.parse_batch(texts), reps=2)
     rows.append((f"sharded.batch.1dev.b{batch}", 1,
                  round(batch / max(dt1, 1e-9), 1), f"texts/s n~{n}"))
     rows.append((f"sharded.batch.mesh{n_dev}dev.b{batch}", n_dev,
                  round(batch / max(dtM, 1e-9), 1),
                  f"texts/s ratio={dt1 / max(dtM, 1e-9):.2f}x "
                  f"mesh={dict(mesh.shape)}"))
-    dl1 = _time(lambda: eng1.parse(long_text, n_chunks=8), reps=2)
-    dlM = _time(lambda: engM.parse(long_text), reps=2)
+    dl1 = _time(lambda: p1.parse(long_text), reps=2)
+    dlM = _time(lambda: pM.parse(long_text), reps=2)
     rows.append((f"sharded.long.1dev", len(long_text),
                  round(dl1 * 1e3, 1), "ms single long text"))
     rows.append((f"sharded.long.mesh{n_dev}dev", len(long_text),
@@ -346,28 +354,31 @@ def bench_packed_throughput(rows, quick, smoke=False):
     """
     import jax.numpy as jnp
 
-    from repro.core.engine import ParserEngine
-    from repro.core.matrices import build_matrices
+    from repro.api import Parser, ParserConfig
     from repro.core.segments import compute_segments
 
+    # e(k) at k=125 has an exponential DFA — build from segments only
+    # (``from_matrices``: the facade path for pre-generated tables)
     table = compute_segments("(a|b)*a(a|b){125}")
-    m = build_matrices(table)
     ell = table.n
-    eng_j = ParserEngine(m)
-    eng_p = ParserEngine(m, backend="packed")
+    p_j = Parser.from_matrices(table, ParserConfig(regex="<e125>", n_chunks=8))
+    p_p = Parser.from_matrices(
+        p_j.matrices, ParserConfig(regex="<e125>", backend="packed", n_chunks=8)
+    )
     n = 300 if smoke else (2_000 if quick else 50_000)
     rng = np.random.default_rng(0)
     text = bytes(rng.choice([97, 98], size=n))
 
-    base = eng_j.parse(text, n_chunks=8)
-    got = eng_p.parse(text, n_chunks=8)
-    ok = np.array_equal(base.pack(), got.pack())
+    base = p_j.parse(text)
+    got = p_p.parse(text)
+    ok = np.array_equal(base.forest.pack(), got.forest.pack())
     rows.append(("packed.bit_identical", ell, int(ok),
                  "packed == jnp SLPF (must be 1)"))
     if not ok:
         raise SystemExit("packed_throughput: packed backend diverged from jnp")
 
     # SLPF-path bytes: stacked chunk products from each backend's real reach
+    eng_j, eng_p = p_j.engine, p_p.engine
     classes = eng_j.classes_of_text(text)
     c, k = eng_j.bucket_shape(len(classes), 8)
     chunks = jnp.asarray(eng_j._pad_to(classes, c, k))
@@ -390,11 +401,11 @@ def bench_packed_throughput(rows, quick, smoke=False):
                  f"{lp * lp * 4}->{lp * (lp // 32) * 4}",
                  "f32 vs packed N-row bytes per reach char"))
 
-    for name, eng in (("jnp", eng_j), ("packed", eng_p)):
-        eng.parse(text, n_chunks=8)            # warm the bucket program
-        dt = _time(lambda: eng.parse(text, n_chunks=8), reps=2)
+    for name, p in (("jnp", p_j), ("packed", p_p)):
+        p.parse(text)                          # warm the bucket program
+        dt = _time(lambda: p.parse(text), reps=2)
         rows.append((f"packed.parse_ms.{name}", n, round(dt * 1e3, 1),
-                     f"ms n={n} compiles={eng.compile_count}"))
+                     f"ms n={n} compiles={p.compile_count}"))
 
 
 def bench_recognizer(rows, quick):
@@ -410,18 +421,16 @@ def bench_recognizer(rows, quick):
 
 def bench_memory(rows, quick):
     from benchmarks.benchmark_res import BIGDATA_RE, make_text_exact
-    from repro.core.engine import ParserEngine
-    from repro.core.reference import ParallelArtifacts
-    from repro.core.slpf import compress
 
-    art = ParallelArtifacts.generate(BIGDATA_RE)
-    eng = ParserEngine(art.matrices)
+    import repro
+
+    parser = repro.Parser(BIGDATA_RE)
     sizes = (1_000, 10_000) if quick else (10_000, 100_000, 1_000_000)
     for n in sizes:
         text = make_text_exact("BIGDATA", n, seed=4)
-        s = eng.parse(text, n_chunks=8)
+        s = parser.parse(text).forest
         packed = s.pack()
-        comp = compress(s)
+        comp = repro.compress(s)
         rows.append((f"memory.packed_bytes_per_char.n{n}", n,
                      round(packed.nbytes / max(len(text), 1), 3), "B/char"))
         rows.append((f"memory.compressed_bytes_per_char.n{n}", n,

@@ -1,17 +1,18 @@
-"""Batched parsing service: many mixed-length texts, one parser, few programs.
+"""Batched parsing via the facade: many mixed-length texts, few programs.
 
-    PYTHONPATH=src python examples/batch_parse.py [--backend jnp|pallas]
+    PYTHONPATH=src python examples/batch_parse.py [--backend jnp|pallas|packed]
 
-Demonstrates the three-layer runtime added for request-level serving:
+Demonstrates the serving stack behind ``repro.Parser``:
 
-  1. backend switch    — ``ParserEngine(backend=...)``: the same reach / join /
-     build&merge program runs on pure jnp or on the Pallas Mosaic kernels
-     (interpret mode off-TPU), bit-identical outputs;
+  1. backend switch    — ``ParserConfig(backend=...)``: the same reach / join /
+     build&merge program runs on pure jnp, the Pallas Mosaic kernels
+     (interpret mode off-TPU), or the bit-packed uint32 word ops —
+     bit-identical outputs;
   2. shape bucketing   — mixed text lengths collapse onto a handful of static
-     (c, k) chunk shapes, so the engine compiles a handful of programs, not
-     one per length (``compile_count`` proves it);
-  3. request scheduling — ``ParseService`` packs queued requests bucket-by-
-     bucket into batched device programs (the LM scheduler's slot pattern).
+     (c, k) chunk shapes (``compile_count`` proves it);
+  3. ticketed serving  — ``submit`` returns a ``ParseTicket`` past
+     deadline-aware admission; ``parse_batch`` drives the bucket-batched
+     service and returns results in order.
 """
 
 import argparse
@@ -20,32 +21,35 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).parents[1] / "src"))
 
-from repro.core.reference import ParallelArtifacts
-from repro.serve.parse_service import ParseService
+import repro
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--backend", default="jnp", choices=["jnp", "pallas"])
+    ap.add_argument("--backend", default="jnp", choices=repro.list_backends())
+    ap.add_argument("--smoke", action="store_true", help="tiny CI run (default sizes already are)")
     args = ap.parse_args()
 
     pattern = "(a|b|ab)+"
-    art = ParallelArtifacts.generate(pattern)
-    svc = ParseService(art.matrices, backend=args.backend, max_batch=8, n_chunks=4)
+    parser = repro.Parser(repro.ParserConfig(
+        regex=pattern, backend=args.backend, max_batch=8, n_chunks=4,
+        slo=repro.SLOTargets(p99_s=5.0),
+    ))
 
     texts = ["ab", "", "abab", "ba" * 3, "a" * 23, "b", "ab" * 40, "aabb" * 5]
     print(f"RE {pattern!r}, backend={args.backend}: "
           f"submitting {len(texts)} texts, lengths {[len(t) for t in texts]}")
-    rids = [svc.submit(t) for t in texts]
-    done = {r.rid: r for r in svc.run()}
+    results = parser.parse_batch(texts, deadline_s=30.0)
 
-    for rid, text in zip(rids, texts):
-        slpf = done[rid].slpf
-        print(f"  len={len(text):3d}  accepted={slpf.accepted!s:5}  "
-              f"trees={slpf.count_trees()}")
-    print(f"{svc.batches_run} device batches, "
-          f"{svc.compile_count} compiled programs "
-          f"(buckets, not per-length re-jits)")
+    for text, res in zip(texts, results):
+        print(f"  len={len(text):3d}  ok={res.ok!s:5}  trees={res.count_trees()}  "
+              f"bucket={res.bucket}")
+    st = parser.stats()
+    print(f"{st['parse']['batches_run']} device batches, "
+          f"{st['compile_count']} compiled programs "
+          f"(buckets, not per-length re-jits); "
+          f"p99 targets met: "
+          f"{all(g.get('p99_ok', True) for g in st['slo']['parse_buckets'].values())}")
 
 
 if __name__ == "__main__":

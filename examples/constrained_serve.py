@@ -19,8 +19,8 @@ sys.path.insert(0, str(Path(__file__).parents[1] / "src"))
 import jax
 import numpy as np
 
+import repro
 from repro.configs import get_smoke
-from repro.core.reference import ParallelArtifacts
 from repro.models.model import init_params
 from repro.serve.engine import ServeEngine, TokenDFA, byte_vocab
 
@@ -31,14 +31,18 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true", help="tiny CI run")
     args = ap.parse_args()
+    if args.smoke:
+        args.batch, args.max_new = 2, 6
 
     cfg = get_smoke("tinyllama-1.1b")
     params = init_params(cfg, jax.random.PRNGKey(0))
     print(f"model: {cfg.name} (random weights) — constraint: {args.pattern!r}")
 
-    art = ParallelArtifacts.generate(args.pattern)
-    tdfa = TokenDFA.from_matrices(art.matrices, byte_vocab(cfg.vocab_size))
+    parser = repro.Parser(args.pattern)   # the public parser facade owns
+    # generation; its matrices feed the token-DFA logit mask
+    tdfa = TokenDFA.from_matrices(parser.matrices, byte_vocab(cfg.vocab_size))
     print(f"token DFA: {tdfa.delta.shape[0]} states over vocab {tdfa.delta.shape[1]}")
 
     engine = ServeEngine(cfg, params, max_seq=args.max_new + 8,

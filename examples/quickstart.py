@@ -1,12 +1,15 @@
-"""Quickstart: generate a parallel parser from an RE and parse a text.
+"""Quickstart: the public API — one Parser, one config, one result type.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--smoke]
 
-Walks the paper's complete pipeline on the running example e3 = (a|b|ab)+:
-parser generation (segments → NFA → DFA/ME-DFA → matrices), chunked parallel
-parsing on the JAX engine, and SLPF inspection (count / enumerate / render).
+Walks the paper's complete pipeline on the running example e3 = (a|b|ab)+
+through the SUPPORTED surface (``repro.Parser`` / ``repro.ParserConfig`` —
+see ROADMAP.md "Public API"): parser generation (segments → NFA → DFA/ME-DFA
+→ matrices), chunked parallel parsing, and SLPF inspection via
+``ParseResult`` (ok / count / enumerate / render / group matches).
 """
 
+import argparse
 import sys
 from pathlib import Path
 
@@ -14,17 +17,21 @@ sys.path.insert(0, str(Path(__file__).parents[1] / "src"))
 
 import numpy as np
 
-from repro.core.engine import ParserEngine
-from repro.core.reference import ParallelArtifacts
+import repro
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="tiny CI run (default sizes already are)")
+    ap.parse_args()
+
     pattern = "(a|b|ab)+"
     text = "abab"
 
     print(f"RE e = {pattern!r}")
-    art = ParallelArtifacts.generate(pattern)
-    t = art.table
+    parser = repro.Parser(repro.ParserConfig(regex=pattern, n_chunks=2))
+    art = parser.artifacts                 # NFA/DFA/ME-DFA introspection
+    t = parser.table
     print(f"parser generated: {t.n} segments, "
           f"DFA {art.dfa.n_states} states, ME-DFA {art.medfa.n_states} states "
           f"({len(art.medfa.initial)} entries — one per segment)")
@@ -33,16 +40,22 @@ def main() -> None:
         flags = ("I" if t.initial[i] else " ") + ("F" if t.final[i] else " ")
         print(f"  {i + 1:3d} {flags}  {t.display(i)}")
 
-    engine = ParserEngine(art.matrices)
-    slpf = engine.parse(text, n_chunks=2)
-    print(f"\nparse {text!r}: accepted={slpf.accepted}, "
-          f"{slpf.count_trees()} syntax trees (paper Fig. 9: 4)")
-    for path in slpf.iter_trees():
-        print("  LST:", slpf.lst_string(path))
+    result = parser.parse(text)
+    print(f"\nparse {text!r}: ok={result.ok}, "
+          f"{result.count_trees()} syntax trees (paper Fig. 9: 4), "
+          f"backend={result.backend}, bucket={result.bucket}")
+    for tree in result.trees():
+        print("  LST:", tree)
+    print(f"group spans: " + ", ".join(
+        f"g{g}={result.matches(g)}" for g in parser.groups))
 
     print("\nclean SLPF columns (segment ids, 1-based):")
-    for r, col in enumerate(slpf.columns):
+    for r, col in enumerate(result.forest.columns):
         print(f"  C_{r}: {sorted((np.flatnonzero(col) + 1).tolist())}")
+
+    # the same config as a plain dict — declarative, file-able, exact
+    print(f"\nconfig round-trip: "
+          f"{repro.ParserConfig.from_dict(parser.config.to_dict()) == parser.config}")
 
 
 if __name__ == "__main__":

@@ -3,9 +3,10 @@
     PYTHONPATH=src python examples/regrep.py '<pattern>' <file> [--group N]
     PYTHONPATH=src python examples/regrep.py --demo
 
-Parses the WHOLE file against the RE with the parallel engine and extracts
-group matches from the SLPF — no false positives from free-text regions,
-unlike a grep for the delimiter (the paper's e-mail example).
+Parses the WHOLE file against the RE with the public ``repro.Parser`` API
+and extracts group matches from the ``ParseResult`` — no false positives
+from free-text regions, unlike a grep for the delimiter (the paper's e-mail
+example).
 """
 
 import argparse
@@ -14,9 +15,7 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).parents[1] / "src"))
 
-from repro.core.engine import ParserEngine
-from repro.core.numbering import OPEN, OP_GROUP
-from repro.core.reference import ParallelArtifacts
+import repro
 
 
 DEMO_RE = r"(F:(a|b)+;T:((a|b)+,)+C:(a|b|;|,)*\.)+"
@@ -24,18 +23,16 @@ DEMO_TEXT = b"F:ab;T:a,ba,C:ab;,b.F:b;T:ab,C:."
 
 
 def regrep(pattern: str, data: bytes, group: int | None, n_chunks: int = 8) -> int:
-    art = ParallelArtifacts.generate(pattern)
-    engine = ParserEngine(art.matrices)
-    slpf = engine.parse(data, n_chunks=n_chunks)
-    if not slpf.accepted:
+    parser = repro.Parser(repro.ParserConfig(regex=pattern, n_chunks=n_chunks))
+    result = parser.parse(data)
+    if not result.ok:
         print("text does not match the RE", file=sys.stderr)
         return 1
-    groups = [s.num for s in art.table.numbered.symbols
-              if s.kind == OPEN and s.op == OP_GROUP]
+    groups = parser.groups
     targets = [group] if group is not None else groups
-    print(f"# {slpf.count_trees()} parse tree(s); groups: {groups}")
+    print(f"# {result.count_trees()} parse tree(s); groups: {groups}")
     for g in targets:
-        for a, b in slpf.get_matches(g):
+        for a, b in result.matches(g):
             print(f"group {g} [{a}:{b}] {data[a:b].decode(errors='replace')!r}")
     return 0
 
@@ -47,8 +44,10 @@ def main() -> None:
     ap.add_argument("--group", type=int, default=None)
     ap.add_argument("--chunks", type=int, default=8)
     ap.add_argument("--demo", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI run (implies --demo)")
     args = ap.parse_args()
-    if args.demo or args.pattern is None:
+    if args.demo or args.smoke or args.pattern is None:
         print(f"demo: pattern={DEMO_RE!r}")
         print(f"      text   ={DEMO_TEXT!r}")
         sys.exit(regrep(DEMO_RE, DEMO_TEXT, None, args.chunks))

@@ -1,79 +1,80 @@
-"""Mesh-native distributed parsing: batch × chunk sharding on one engine.
+"""Mesh-native distributed parsing via the facade: ``ParserConfig(mesh=...)``.
 
-    PYTHONPATH=src python examples/sharded_parse.py
+    PYTHONPATH=src python examples/sharded_parse.py [--smoke]
 
-Forces 8 host devices (CPU) unless XLA_FLAGS is already set, then
-demonstrates the distribution layer (``core/distributed.py``):
+Forces 8 host devices (CPU) unless XLA_FLAGS is already set.  Distribution
+is DECLARATIVE on the public API — ``mesh="host"`` selects a ('pod', 'data')
+mesh over every visible device, PaREM-style chunk splitting over it:
 
   1. chunk-sharded parse  — ONE long text, chunk dim split over every
-     'chunk' mesh axis ('pod' × 'data'); reach/build&merge run shard-local,
-     one all-gather of the (c, ℓp, ℓp) product stack feeds the replicated
-     join;
-  2. sharded-batched parse — ``parse_batch`` slots shard over 'data' while
-     chunks keep 'pod' (the MeshRules composition), so one program serves
-     many texts across the mesh;
-  3. sharded streaming     — a ``StreamingParser`` on the mesh engine ships
-     its sealed-product stack as the all-gather payload.
+     'chunk' mesh axis; reach/build&merge run shard-local, one all-gather of
+     the product stack feeds the replicated join;
+  2. sharded-batched parse — batch slots shard over 'data' while chunks keep
+     'pod', one program serves many texts across the mesh;
+  3. sharded streaming     — a facade stream on the mesh engine ships its
+     sealed-product stack as the all-gather payload.
 
-Every output is bit-identical to the single-device engine.
+Every output is bit-identical to the single-device parser.
 """
 
 import os
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
+import argparse
 import sys
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).parents[1] / "src"))
 
-import jax
 import numpy as np
 
-from repro.core.engine import ParserEngine
-from repro.core.reference import ParallelArtifacts
-from repro.core.stream import StreamingParser
-from repro.launch.mesh import make_parse_mesh
+import repro
 
 
 def main() -> None:
-    pattern = "(a|b|ab)+"
-    art = ParallelArtifacts.generate(pattern)
-    mesh = make_parse_mesh()
-    print(f"RE {pattern!r} on {len(jax.devices())} devices, "
-          f"mesh {dict(mesh.shape)}")
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="tiny CI run (default sizes already are)")
+    ap.parse_args()
 
-    ref = ParserEngine(art.matrices)
-    eng = ParserEngine(art.matrices, mesh=mesh)
-    d = eng.dist
+    pattern = "(a|b|ab)+"
+    ref = repro.Parser(repro.ParserConfig(regex=pattern))
+    eng = repro.Parser(repro.ParserConfig(regex=pattern, mesh="host"))
+    d = eng.engine.dist
+    print(f"RE {pattern!r} on mesh {dict(eng.engine.mesh.shape)}")
     print(f"  chunk axes {d.chunk_axes} (single text) | "
           f"batch over {d.batch_axes} x chunks over {d.batch_chunk_axes}")
 
     # 1. one long text, chunks over the whole mesh
     long_text = "ab" * 4000
     s = eng.parse(long_text)
-    print(f"single long text n={len(long_text)}: accepted={s.accepted} "
+    print(f"single long text n={len(long_text)}: ok={s.ok} "
           f"trees(log2)~{s.count_trees().bit_length()} "
-          f"bit-identical={np.array_equal(s.pack(), ref.parse(long_text).pack())}")
+          f"bit-identical="
+          f"{np.array_equal(s.forest.pack(), ref.parse(long_text).forest.pack())}")
 
     # 2. mixed-length batch, batch x chunk sharding
     texts = ["ab", "", "abab", "ba" * 3, "a" * 23, "ab" * 40, "x", "aabb" * 5]
     got = eng.parse_batch(texts)
     base = ref.parse_batch(texts)
-    same = all(np.array_equal(g.pack(), b.pack()) for g, b in zip(got, base))
+    same = all(
+        np.array_equal(g.forest.pack(), b.forest.pack())
+        for g, b in zip(got, base)
+    )
     print(f"batch of {len(texts)} mixed-length texts: "
-          f"accepted={[g.accepted for g in got]} bit-identical={same}")
+          f"ok={[g.ok for g in got]} bit-identical={same}")
 
     # 3. sharded streaming: sealed products are the all-gather payload
-    sp = StreamingParser(eng, first_seal_len=4)
-    prefix = ""
-    for piece in ["ab", "abab", "ba", "ab" * 10]:
-        sp.append(piece)
-        prefix += piece
-        cold = ref.parse(prefix)
-        print(f"  +{piece!r:12} n={sp.n:3d} accepted={sp.accepted!s:5} "
-              f"sealed={sp.n_sealed_chunks} "
-              f"bit-identical={np.array_equal(sp.current_slpf().pack(), cold.pack())}")
+    with eng.open_stream() as stream:
+        prefix = ""
+        for piece in ["ab", "abab", "ba", "ab" * 10]:
+            stream.append(piece)
+            prefix += piece
+            res = stream.result()
+            cold = ref.parse(prefix)
+            print(f"  +{piece!r:12} n={res.forest.n:3d} ok={res.ok!s:5} "
+                  f"bit-identical="
+                  f"{np.array_equal(res.forest.pack(), cold.forest.pack())}")
 
 
 if __name__ == "__main__":

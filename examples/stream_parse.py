@@ -1,18 +1,16 @@
-"""Streaming incremental parse: append text, re-pay only the tail + join.
+"""Streaming incremental parse via the facade: append, re-pay only the tail.
 
-    PYTHONPATH=src python examples/stream_parse.py [--backend jnp|pallas]
+    PYTHONPATH=src python examples/stream_parse.py [--backend jnp|pallas|packed]
 
-Demonstrates the streaming subsystem layered on the phase-split runtime:
+Demonstrates the streaming surface of ``repro.Parser``:
 
-  1. prefix cache      — ``StreamingParser`` seals geometric chunks with
-     their reach products P_i; ``append`` re-runs only the appended piece's
-     reach + an O(log n) join over the cached summaries, and every state is
-     bit-identical to a cold ``ParserEngine.parse`` of the full prefix;
-  2. snapshot/restore  — O(1) capture of the whole stream (speculative
-     parses, editor undo);
-  3. session serving   — ``StreamService`` runs many concurrent streams over
-     ONE engine, batching same-bucket tail pieces into one device reach and
-     evicting cold sessions' caches under a bytes budget.
+  1. ``open_stream``   — each stream owns a persistent chunk-product prefix
+     cache; ``append`` re-runs only the appended piece's reach + an O(log n)
+     join, and every state is bit-identical to a cold parse of the prefix;
+  2. deadline-aware appends — the same typed admission as ``submit``;
+  3. many sessions     — concurrent streams batch their tail pieces into one
+     device reach over ONE engine, under a bytes-budget eviction policy
+     (``ParserConfig.cache_budget_bytes``).
 """
 
 import argparse
@@ -23,59 +21,48 @@ sys.path.insert(0, str(Path(__file__).parents[1] / "src"))
 
 import numpy as np
 
-from repro.core.engine import ParserEngine
-from repro.core.reference import ParallelArtifacts
-from repro.core.stream import StreamingParser
-from repro.serve.stream_service import StreamService
+import repro
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--backend", default="jnp", choices=["jnp", "pallas"])
+    ap.add_argument("--backend", default="jnp", choices=repro.list_backends())
+    ap.add_argument("--smoke", action="store_true", help="tiny CI run (default sizes already are)")
     args = ap.parse_args()
 
     pattern = "(a|b|ab)+"
-    art = ParallelArtifacts.generate(pattern)
-    engine = ParserEngine(art.matrices, backend=args.backend)
+    parser = repro.Parser(repro.ParserConfig(
+        regex=pattern, backend=args.backend, first_seal_len=4,
+        cache_budget_bytes=256 * 1024,
+    ))
+    cold = repro.Parser(repro.ParserConfig(regex=pattern, backend=args.backend))
 
     # 1. one live stream, incremental states vs cold re-parse ---------------
-    sp = StreamingParser(engine, first_seal_len=4)
-    prefix = ""
     print(f"RE {pattern!r}, backend={args.backend}: streaming appends")
-    for piece in ["ab", "ab", "x", "", "abab"]:
-        sp.append(piece)
-        prefix += piece
-        slpf = sp.current_slpf()
-        cold = engine.parse(prefix)
-        print(f"  +{piece!r:8} n={sp.n:3d}  accepted={sp.accepted!s:5} "
-              f"trees={slpf.count_trees():4d}  sealed={sp.n_sealed_chunks}  "
-              f"bit-identical={np.array_equal(slpf.pack(), cold.pack())}")
+    with parser.open_stream() as stream:
+        prefix = ""
+        for piece in ["ab", "ab", "x", "", "abab"]:
+            stream.append(piece, deadline_s=30.0)
+            prefix += piece
+            res = stream.result()
+            ref = cold.parse(prefix)
+            print(f"  +{piece!r:8} n={res.forest.n:3d}  ok={res.ok!s:5} "
+                  f"trees={res.count_trees():4d}  "
+                  f"bit-identical={np.array_equal(res.forest.pack(), ref.forest.pack())}")
 
-    # 2. snapshot / restore --------------------------------------------------
-    sp = StreamingParser(engine, first_seal_len=4)
-    sp.append("abab")
-    snap = sp.snapshot()
-    sp.append("x")                      # speculative append kills the forest
-    dead = sp.accepted
-    sp.restore(snap)
-    sp.append("ab")                     # …rewound and continued
-    print(f"snapshot/restore: speculative 'x' accepted={dead}, "
-          f"restored+'ab' accepted={sp.accepted} trees={sp.count_trees()}")
-
-    # 3. many sessions, one engine ------------------------------------------
-    svc = StreamService(engine, max_batch=8, first_seal_len=4,
-                        cache_budget_bytes=256 * 1024)
-    sids = [svc.open() for _ in range(4)]
+    # 2. many sessions, one engine ------------------------------------------
+    streams = [parser.open_stream() for _ in range(4)]
     feeds = ["ab" * 8, "abab" * 5, "b" + "ab" * 6, "ba" * 4]
     for rnd in range(4):                # interleaved round-robin appends
-        for sid, feed in zip(sids, feeds):
+        for stream, feed in zip(streams, feeds):
             q = len(feed) // 4
-            svc.append(sid, feed[rnd * q : (rnd + 1) * q])
-    svc.drain()                         # batched absorption across sessions
-    for sid, feed in zip(sids, feeds):
-        slpf = svc.slpf(sid)
-        print(f"  session {sid}: n={slpf.n:3d} trees={slpf.count_trees()}")
-    st = svc.stats
+            stream.append(feed[rnd * q : (rnd + 1) * q])
+    parser.stream_service.drain()       # batched absorption across sessions
+    for stream, feed in zip(streams, feeds):
+        res = stream.result()
+        print(f"  session {stream.sid}: n={res.forest.n:3d} trees={res.count_trees()}")
+        stream.close()
+    st = parser.stats()["stream"]
     print(f"{st['batches_run']} reach batches for "
           f"{sum(v['served'] for v in st['buckets'].values())} appends, "
           f"{st['bytes_cached']} bytes cached, {st['evictions']} evictions, "

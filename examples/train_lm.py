@@ -45,8 +45,12 @@ def main() -> None:
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--workdir", default="/tmp/repro_train")
-    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI run: smoke preset, 3 steps")
     args = ap.parse_args()
+    if args.smoke:
+        args.preset, args.steps = "smoke", min(args.steps, 3)
+        args.seq, args.batch = min(args.seq, 32), min(args.batch, 2)
 
     cfg = preset_100m() if args.preset == "100m" else get_smoke(args.arch)
     mesh = make_host_mesh()

@@ -43,4 +43,21 @@ XLA_FLAGS="--xla_force_host_platform_device_count=8" \
 XLA_FLAGS="--xla_force_host_platform_device_count=8" \
     python -m benchmarks.run --only sharded_throughput --smoke
 
+# examples smoke gate: every example runs end-to-end on tiny inputs through
+# the public facade ONLY — repo-internal DeprecationWarnings (messages are
+# "repro: ..."-prefixed) escalate to errors, so a call site that regressed
+# onto resolve_engine / direct service construction fails CI here
+EXAMPLES_WORKDIR="$(mktemp -d)"
+trap 'rm -rf "$EXAMPLES_WORKDIR"' EXIT
+for ex in examples/*.py; do
+    echo "## example smoke: $ex"
+    case "$ex" in
+        examples/train_lm.py)
+            python -W "error:repro:DeprecationWarning" "$ex" --smoke \
+                --workdir "$EXAMPLES_WORKDIR/train" ;;
+        *)
+            python -W "error:repro:DeprecationWarning" "$ex" --smoke ;;
+    esac
+done
+
 python -m benchmarks.run --quick --only tab5

@@ -1,0 +1,90 @@
+"""repro — a parallel parser for regular expressions (JAX/Pallas).
+
+Public surface (``repro/api.py`` is the one supported entry point):
+
+    import repro
+
+    p = repro.Parser("(a|b|ab)+")                 # or repro.ParserConfig(...)
+    r = p.parse("abab")                           # ParseResult
+    r.ok, r.count_trees(), r.matches(1), r.trees(limit=4)
+
+    ticket = p.submit(text, deadline_s=0.050)     # deadline-aware admission
+    stream = p.open_stream(); stream.append("ab") # incremental parsing
+    p.stats()                                     # both services + SLO grades
+
+Exports resolve lazily: ``import repro`` is free (no jax import); the cost
+is paid on first attribute access, and only for the layer you touch —
+``repro.errors`` / ``repro.ParseError`` never import jax at all.
+"""
+
+from __future__ import annotations
+
+from typing import TYPE_CHECKING
+
+# attribute name → (module, attribute) — resolved on first access
+_EXPORTS = {
+    # facade (repro/api.py)
+    "Parser": ("repro.api", "Parser"),
+    "ParserConfig": ("repro.api", "ParserConfig"),
+    "SLOTargets": ("repro.api", "SLOTargets"),
+    "ParseResult": ("repro.api", "ParseResult"),
+    "ParseTicket": ("repro.api", "ParseTicket"),
+    "ParserStream": ("repro.api", "ParserStream"),
+    # forest + backend registry helpers
+    "SLPF": ("repro.core.slpf", "SLPF"),
+    "compress": ("repro.core.slpf", "compress"),
+    "ParserBackend": ("repro.core.backend", "ParserBackend"),
+    "register_backend": ("repro.core.backend", "register_backend"),
+    "get_backend": ("repro.core.backend", "get_backend"),
+    "list_backends": ("repro.core.backend", "list_backends"),
+    # typed errors (jax-free module)
+    "ParseError": ("repro.errors", "ParseError"),
+    "AdmissionError": ("repro.errors", "AdmissionError"),
+    "SessionNotFound": ("repro.errors", "SessionNotFound"),
+    "BudgetExceeded": ("repro.errors", "BudgetExceeded"),
+}
+
+__all__ = sorted(_EXPORTS) + ["api", "errors"]
+
+if TYPE_CHECKING:  # static importers see the real types
+    from .api import (  # noqa: F401
+        ParseResult,
+        ParseTicket,
+        Parser,
+        ParserConfig,
+        ParserStream,
+        SLOTargets,
+    )
+    from .core.backend import (  # noqa: F401
+        ParserBackend,
+        get_backend,
+        list_backends,
+        register_backend,
+    )
+    from .core.slpf import SLPF, compress  # noqa: F401
+    from .errors import (  # noqa: F401
+        AdmissionError,
+        BudgetExceeded,
+        ParseError,
+        SessionNotFound,
+    )
+
+
+def __getattr__(name: str):
+    import importlib
+
+    if name in ("api", "errors"):   # advertised submodules: repro.api / repro.errors
+        value = importlib.import_module(f"repro.{name}")
+        globals()[name] = value
+        return value
+    try:
+        module, attr = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(f"module 'repro' has no attribute {name!r}") from None
+    value = getattr(importlib.import_module(module), attr)
+    globals()[name] = value  # cache: next access skips __getattr__
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

@@ -1,0 +1,755 @@
+"""The public parse API: one facade, one declarative config, one result type.
+
+The paper's tool exposes parsing as ONE operation — text in, shared parse
+forest with match/children/tree accessors out (Sect. 4.2 / App. A).  This
+module is that surface for the whole runtime grown in PRs 1-4:
+
+  ``ParserConfig``   a frozen, validated, dict-round-trippable description of
+                     a parser: the RE, the phase backend (jnp / pallas /
+                     packed, with the Pallas-kernel toggle), the chunk-split
+                     and bucket policy (PaREM's chunk model: serial is
+                     ``n_chunks=1``, chunked is ``n_chunks>1``, distributed
+                     is ``mesh=``), streaming seal policy, admission budgets,
+                     and SLO targets (per-bucket p50/p99 latency goals +
+                     default deadline).
+
+  ``Parser``         the facade.  Owns engine and service construction —
+                     callers never assemble ``ParserEngine`` /
+                     ``ParseService`` / ``StreamService`` by hand (direct
+                     construction is deprecated).  One synchronous surface
+                     (``parse`` / ``parse_batch``), one asynchronous
+                     submission surface (``submit`` → ``ParseTicket``), one
+                     streaming surface (``open_stream`` → ``ParserStream``),
+                     and ``stats()`` aggregating both services plus SLO
+                     conformance.
+
+  ``ParseResult``    first-class result wrapping the ``SLPF``: ``ok``,
+                     ``matches(group)``, ``children(span)``, ``trees(limit)``,
+                     timing/backend metadata, and ``forest`` (the SLPF
+                     itself) for everything forest-level.
+
+  ``ParseTicket``    deadline-aware asynchronous handle: ``done()`` /
+                     ``result()`` / ``cancel()``.  ``submit(text,
+                     deadline_s=...)`` runs deadline-aware admission — a
+                     request whose shape bucket's observed p99 latency
+                     already exceeds the remaining deadline is rejected with
+                     ``repro.errors.AdmissionError`` before any device work
+                     (the ROADMAP SLO item; cold buckets predict 0.0 and
+                     admit).
+
+Every error is typed (``repro/errors.py``); every route stays bit-identical
+to the direct engine paths (enforced by ``tests/test_conformance.py``, where
+the facade is a first-class conformance route).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple, Union
+
+from .core.backend import ParserBackend, get_backend, list_backends, register_backend
+from .core.engine import ParserEngine
+from .core.matrices import ParserMatrices, build_matrices
+from .core.segments import SegmentTable, compute_segments
+from .core.slpf import SLPF
+from .errors import AdmissionError, BudgetExceeded, ParseError, SessionNotFound
+from .serve.parse_service import ParseRequest, ParseService
+from .serve.stream_service import StreamService
+
+# Mesh axes of the declarative ``mesh="host"`` spec (launch/mesh.py's
+# make_parse_mesh): chunks shard over 'pod', batch slots over 'data'.
+_HOST_MESH_AXES = ("pod", "data")
+
+
+def _is_pow2(x: int) -> bool:
+    return x >= 1 and (x & (x - 1)) == 0
+
+
+# ------------------------------------------------------------------ config
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOTargets:
+    """Latency objectives applied per device-program bucket.
+
+    ``p50_s``/``p99_s`` are the per-bucket targets ``Parser.stats()`` grades
+    observed latency against; ``default_deadline_s`` is the admission
+    deadline ``submit``/``append`` use when the caller passes none (None ⇒
+    no implicit deadline — everything admits).
+    """
+
+    p50_s: Optional[float] = None
+    p99_s: Optional[float] = None
+    default_deadline_s: Optional[float] = None
+
+    def __post_init__(self):
+        for name in ("p50_s", "p99_s", "default_deadline_s"):
+            v = getattr(self, name)
+            if v is not None and v <= 0.0:
+                raise ValueError(f"SLOTargets.{name} must be positive, got {v!r}")
+        if self.p50_s is not None and self.p99_s is not None and self.p50_s > self.p99_s:
+            raise ValueError(
+                f"SLOTargets.p50_s ({self.p50_s}) must not exceed p99_s ({self.p99_s})"
+            )
+
+
+@dataclasses.dataclass(frozen=True)
+class ParserConfig:
+    """Declarative, validated, dict-round-trippable parser description.
+
+    Validation happens at construction (``__post_init__``) so an invalid
+    config never reaches device code: unknown backend names, a kernel toggle
+    on a backend without kernels, non-power-of-two bucket policy, mesh rules
+    without a mesh, and mesh axes that cannot resolve on the declared mesh
+    all raise ``ValueError`` immediately.
+
+    ``to_dict()``/``from_dict()`` round-trip exactly (plain JSON-able
+    values), and two Parsers built from a config and its round-trip produce
+    bit-identical SLPFs (tested).
+    """
+
+    # what to parse
+    regex: str
+    # phase backend: a registered name; kernel=True selects the backend's
+    # Pallas-kernel reach path where one exists (pallas is always kernels)
+    backend: str = "jnp"
+    kernel: bool = False
+    # chunk-split policy (PaREM's model): 1 = serial, >1 = chunked; the
+    # bucket policy rounds chunk lengths to pow2 with this floor
+    n_chunks: int = 8
+    min_chunk_len: int = 8
+    # batched serving
+    max_batch: int = 8
+    max_pending: Optional[int] = None
+    # streaming seal/bucket policy (pow2 geometric sealing)
+    first_seal_len: int = 8
+    max_seal_len: Optional[int] = None
+    cache_budget_bytes: Optional[int] = None
+    max_pending_chars: Optional[int] = None
+    # distribution: None = single device; "host" = a ('pod','data') mesh over
+    # every visible device (launch/mesh.py make_parse_mesh).  mesh_rules maps
+    # logical axes ('chunk', 'batch') to mesh axes; values must resolve on
+    # the declared mesh.
+    mesh: Optional[str] = None
+    mesh_rules: Optional[Tuple[Tuple[str, Tuple[str, ...]], ...]] = None
+    # service-level objectives (admission + stats grading)
+    slo: Optional[SLOTargets] = None
+
+    def __post_init__(self):
+        if not isinstance(self.regex, str) or not self.regex:
+            raise ValueError("ParserConfig.regex must be a non-empty pattern string")
+        known = list_backends()
+        if self.backend not in known:
+            raise ValueError(
+                f"unknown parse backend {self.backend!r}; known: {known}"
+            )
+        if self.kernel and self.backend == "jnp":
+            raise ValueError(
+                "kernel=True selects a Pallas kernel path; the 'jnp' backend "
+                "has none (use backend='pallas' or backend='packed')"
+            )
+        if self.n_chunks < 1:
+            raise ValueError(f"n_chunks must be >= 1, got {self.n_chunks}")
+        for name in ("min_chunk_len", "first_seal_len"):
+            v = getattr(self, name)
+            if not _is_pow2(v):
+                raise ValueError(
+                    f"{name} must be a power of two (the bucket policy "
+                    f"compiles one program per pow2 shape), got {v}"
+                )
+        if self.max_seal_len is not None and not _is_pow2(self.max_seal_len):
+            raise ValueError(
+                f"max_seal_len must be a power of two, got {self.max_seal_len}"
+            )
+        if self.max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
+        for name in ("max_pending", "cache_budget_bytes", "max_pending_chars"):
+            v = getattr(self, name)
+            if v is not None and v < 1:
+                raise ValueError(f"{name} must be positive or None, got {v}")
+        if self.mesh not in (None, "host"):
+            raise ValueError(
+                f"mesh must be None (single device) or 'host' (a "
+                f"{_HOST_MESH_AXES} mesh over every device), got {self.mesh!r}"
+            )
+        # normalize mesh_rules: accept a mapping / iterable of pairs; store a
+        # canonical hashable tuple-of-pairs with tuple axis values
+        if self.mesh_rules is not None:
+            if self.mesh is None:
+                raise ValueError("mesh_rules requires mesh to be set")
+            items = (
+                self.mesh_rules.items()
+                if isinstance(self.mesh_rules, Mapping)
+                else self.mesh_rules
+            )
+            norm = []
+            for name, axes in items:
+                if axes is None:
+                    axes_t: Tuple[str, ...] = ()
+                elif isinstance(axes, str):
+                    axes_t = (axes,)
+                else:
+                    axes_t = tuple(axes)
+                for a in axes_t:
+                    if a not in _HOST_MESH_AXES:
+                        raise ValueError(
+                            f"mesh_rules[{name!r}] names mesh axis {a!r} which "
+                            f"does not resolve on the declared mesh (axes: "
+                            f"{_HOST_MESH_AXES})"
+                        )
+                norm.append((str(name), axes_t))
+            object.__setattr__(self, "mesh_rules", tuple(sorted(norm)))
+        if self.slo is not None and isinstance(self.slo, Mapping):
+            object.__setattr__(self, "slo", SLOTargets(**dict(self.slo)))
+
+    # ------------------------------------------------------- dict round-trip
+
+    def to_dict(self) -> Dict[str, Any]:
+        """Plain JSON-able dict; ``from_dict`` round-trips it exactly."""
+        d = dataclasses.asdict(self)
+        if self.mesh_rules is not None:
+            d["mesh_rules"] = {name: list(axes) for name, axes in self.mesh_rules}
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "ParserConfig":
+        d = dict(d)
+        unknown = set(d) - {f.name for f in dataclasses.fields(cls)}
+        if unknown:
+            raise ValueError(f"unknown ParserConfig keys: {sorted(unknown)}")
+        return cls(**d)
+
+    def replace(self, **kw) -> "ParserConfig":
+        return dataclasses.replace(self, **kw)
+
+    # ------------------------------------------------------------- builders
+
+    def build_backend(self) -> ParserBackend:
+        """Instantiate the configured phase backend (kernel toggle applied)."""
+        from .core.backend import PackedBackend
+
+        if self.backend == "packed" and self.kernel:
+            return PackedBackend(kernel=True)
+        return get_backend(self.backend)
+
+    def build_mesh(self):
+        """The declared device mesh, or None on a single-device config."""
+        if self.mesh is None:
+            return None
+        from .launch.mesh import make_parse_mesh
+
+        return make_parse_mesh()
+
+    def build_mesh_rules(self):
+        """``MeshRules`` with this config's overrides, or None for defaults."""
+        if self.mesh_rules is None:
+            return None
+        from .parallel.sharding import MeshRules
+
+        overrides = {
+            name: (axes if len(axes) != 1 else axes[0]) or None
+            for name, axes in self.mesh_rules
+        }
+        return MeshRules().with_overrides(**overrides)
+
+
+# ------------------------------------------------------------------ results
+
+
+@dataclasses.dataclass
+class ParseResult:
+    """First-class parse result: the forest plus accessors and metadata.
+
+    The forest-level query API of the paper's tool (Sect. 4.2 / App. A)
+    lives here; anything deeper (arcs, packing, compression) is reachable
+    through ``forest`` — the ``SLPF`` itself.
+    """
+
+    forest: SLPF
+    backend: str
+    bucket: Optional[Tuple[int, int]] = None
+    latency_s: Optional[float] = None
+    n_chunks: Optional[int] = None
+
+    # ------------------------------------------------------------- queries
+
+    @property
+    def ok(self) -> bool:
+        """Did the text match the RE (non-empty clean forest)?"""
+        return self.forest.accepted
+
+    @property
+    def slpf(self) -> SLPF:
+        """Alias of ``forest`` (the shared linearized parse forest)."""
+        return self.forest
+
+    def count_trees(self) -> int:
+        return self.forest.count_trees()
+
+    def matches(self, group: int, limit: Optional[int] = 1000) -> List[Tuple[int, int]]:
+        """(start, end) spans of a numbered group / operator pair (App. A)."""
+        return self.forest.get_matches(group, limit=limit)
+
+    def children(
+        self, span: Tuple[int, int], limit: Optional[int] = 1000
+    ) -> List[Tuple[int, int, int]]:
+        """Direct child spans of a match span, from the tree structure.
+
+        For each LST (up to ``limit``) containing a paren pair matching
+        ``span`` exactly, collect the (group, start, end) pairs DIRECTLY
+        nested under it (paper ``getChildren``).  The paren nesting stack is
+        walked per tree, so only immediate children are reported — not every
+        transitively contained span.
+        """
+        from .core.numbering import CLOSE, OPEN
+
+        span = (int(span[0]), int(span[1]))
+        syms = self.forest.table.numbered.symbols
+        out: Dict[Tuple[int, int, int], None] = {}
+        for path in self.forest.iter_trees(limit=limit):
+            # stack entries: [group num, start boundary, collected children]
+            stack: List[List[Any]] = []
+            for r, q in enumerate(path):
+                for sid in self.forest.table.segs[q][:-1]:
+                    s = syms[sid]
+                    if s.kind == OPEN:
+                        stack.append([s.num, r, []])
+                    elif s.kind == CLOSE:
+                        num, st, kids = stack.pop()
+                        if stack:
+                            stack[-1][2].append((num, st, r))
+                        if (st, r) == span:
+                            for kid in kids:
+                                out[kid] = None
+        return sorted(out)
+
+    def trees(self, limit: Optional[int] = None, *, paths: bool = False) -> List:
+        """Up to ``limit`` LSTs — rendered parenthesized strings by default,
+        raw segment-id paths with ``paths=True``."""
+        if paths:
+            return list(self.forest.iter_trees(limit=limit))
+        return [
+            self.forest.lst_string(p) for p in self.forest.iter_trees(limit=limit)
+        ]
+
+
+# ------------------------------------------------------------------ tickets
+
+
+class ParseTicket:
+    """Asynchronous handle for one submitted parse (``Parser.submit``).
+
+    The underlying request is already past deadline-aware admission; the
+    ticket resolves it: ``done()`` is a free check, ``result()`` drives the
+    service until THIS request is served (batching with whatever else is
+    queued) and returns the ``ParseResult``, ``cancel()`` drops it from the
+    queue if no batch has picked it up yet.
+    """
+
+    def __init__(
+        self,
+        parser: "Parser",
+        service: ParseService,
+        request: ParseRequest,
+        deadline_s: Optional[float] = None,
+    ):
+        self._parser = parser
+        self._service = service
+        self._request = request
+        self._result: Optional[ParseResult] = None
+        self._cancelled = False
+        self.deadline_s = deadline_s   # the admitted remaining budget
+
+    @property
+    def rid(self) -> int:
+        return self._request.rid
+
+    def done(self) -> bool:
+        return self._request.done
+
+    def cancel(self) -> bool:
+        """Drop the request if it has not been served; True on success."""
+        if self._request.done:
+            return False
+        self._cancelled = self._service.cancel(self._request.rid)
+        return self._cancelled
+
+    def result(self) -> ParseResult:
+        """Serve (if needed) and return the result; raises on a cancelled
+        ticket."""
+        if self._result is not None:
+            return self._result
+        if self._cancelled:
+            raise ParseError(f"parse request {self._request.rid} was cancelled")
+        while not self._request.done:
+            if not self._service.step():
+                raise ParseError(
+                    f"parse request {self._request.rid} is no longer queued"
+                )
+        self._service.reap(self._request)
+        self._result = self._parser._wrap(
+            self._request.slpf,
+            bucket=self._request.bucket,
+            latency_s=self._request.latency_s,
+        )
+        return self._result
+
+
+# ------------------------------------------------------------------ streams
+
+
+class ParserStream:
+    """One streaming session of ``Parser.open_stream`` (context manager).
+
+    Appends go through the shared ``StreamService`` — concurrent sessions
+    batch their tail pieces into one device reach — and carry the same
+    deadline-aware admission as ``submit``.  ``result()`` materializes the
+    current prefix's ``ParseResult``; ``accepted`` is the O(1) streaming
+    acceptance state.
+    """
+
+    def __init__(self, parser: "Parser", service: StreamService, sid: int):
+        self._parser = parser
+        self._service = service
+        self._sid = sid
+        self._closed = False
+
+    @property
+    def sid(self) -> int:
+        return self._sid
+
+    @property
+    def n(self) -> int:
+        """Characters absorbed into the prefix so far (queued appends not
+        yet drained are excluded)."""
+        return self._service._session(self._sid).parser.n
+
+    @property
+    def n_sealed_chunks(self) -> int:
+        """Sealed chunk products resident in this stream's prefix cache."""
+        return self._service._session(self._sid).parser.n_sealed_chunks
+
+    def append(self, text, *, deadline_s: Optional[float] = None) -> int:
+        """Queue text onto this stream; returns chars queued (admission may
+        raise ``AdmissionError``/``BudgetExceeded``)."""
+        if deadline_s is None:
+            deadline_s = self._parser._default_deadline_s()
+        return self._service.append(self._sid, text, deadline_s=deadline_s)
+
+    @property
+    def accepted(self) -> bool:
+        """Is the current prefix a valid text (drains this session only)?"""
+        return self._service.accepted(self._sid)
+
+    def result(self) -> ParseResult:
+        """ParseResult of the full current prefix (drains this session)."""
+        t0 = time.perf_counter()
+        slpf = self._service.slpf(self._sid)
+        return self._parser._wrap(slpf, latency_s=time.perf_counter() - t0)
+
+    def close(self) -> None:
+        if not self._closed:
+            self._service.close(self._sid)
+            self._closed = True
+
+    def __enter__(self) -> "ParserStream":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+# ------------------------------------------------------------------- facade
+
+
+class Parser:
+    """The one public parser: built from a ``ParserConfig`` (or a pattern).
+
+        p = repro.Parser("(a|b|ab)+")             # defaults
+        p = repro.Parser(ParserConfig(regex=..., backend="packed",
+                                      mesh="host", slo=SLOTargets(...)))
+
+    Owns every lower layer: the ``ParserEngine`` (backend, bucket policy,
+    mesh placement), a lazy ``ParseService`` (batched one-shot requests) and
+    a lazy ``StreamService`` (streaming sessions) — both over the SAME
+    engine, so all routes share one compiled-program set.  ``stats()``
+    aggregates both services plus SLO conformance.
+    """
+
+    def __init__(
+        self,
+        config: Union[ParserConfig, str, Mapping[str, Any]],
+        *,
+        matrices: Optional[ParserMatrices] = None,
+    ):
+        if isinstance(config, str):
+            config = ParserConfig(regex=config)
+        elif isinstance(config, Mapping):
+            config = ParserConfig.from_dict(config)
+        if not isinstance(config, ParserConfig):
+            raise TypeError(
+                f"Parser takes a ParserConfig, a pattern string, or a config "
+                f"dict; got {type(config).__name__}"
+            )
+        self.config = config
+        if matrices is None:
+            matrices = build_matrices(compute_segments(config.regex))
+        self.matrices = matrices
+        self.engine = ParserEngine(
+            matrices,
+            backend=config.build_backend(),
+            min_chunk_len=config.min_chunk_len,
+            mesh=config.build_mesh(),
+            mesh_rules=config.build_mesh_rules(),
+        )
+        self._parse_service: Optional[ParseService] = None
+        self._stream_service: Optional[StreamService] = None
+        self._artifacts = None
+
+    @classmethod
+    def from_matrices(
+        cls,
+        matrices_or_table: Union[ParserMatrices, SegmentTable],
+        config: Union[ParserConfig, str, Mapping[str, Any], None] = None,
+    ) -> "Parser":
+        """Build a Parser over pre-generated matrices / a segment table.
+
+        The advanced entry point for parsers whose RE exists only as an AST
+        or whose tables were generated elsewhere; ``config.regex`` is then
+        informational.  ``config`` defaults to the given pattern-less
+        defaults.
+        """
+        if isinstance(matrices_or_table, SegmentTable):
+            matrices_or_table = build_matrices(matrices_or_table)
+        if config is None:
+            config = ParserConfig(regex="<prebuilt>")
+        elif isinstance(config, str):
+            config = ParserConfig(regex=config)
+        elif isinstance(config, Mapping):
+            config = ParserConfig.from_dict(config)
+        return cls(config, matrices=matrices_or_table)
+
+    # ------------------------------------------------------------- plumbing
+
+    @property
+    def backend_name(self) -> str:
+        return self.engine.backend.name
+
+    @property
+    def compile_count(self) -> int:
+        return self.engine.compile_count
+
+    @property
+    def table(self) -> SegmentTable:
+        return self.engine.table
+
+    @property
+    def artifacts(self):
+        """Full ``ParallelArtifacts`` (NFA/DFA/ME-DFA…) for introspection.
+
+        Built lazily — parsing never needs the exponential DFA, only the
+        matrices — and only constructible when the config carries a real
+        pattern (not ``from_matrices``' placeholder)."""
+        if self._artifacts is None:
+            from .core.reference import ParallelArtifacts
+
+            self._artifacts = ParallelArtifacts.generate(self.matrices.table)
+        return self._artifacts
+
+    @property
+    def groups(self) -> List[int]:
+        """Numbered group ids extractable via ``ParseResult.matches``."""
+        from .core.numbering import OPEN, OP_GROUP
+
+        return sorted(
+            {
+                s.num
+                for s in self.table.numbered.symbols
+                if s.kind == OPEN and s.op == OP_GROUP
+            }
+        )
+
+    def _default_deadline_s(self) -> Optional[float]:
+        slo = self.config.slo
+        return slo.default_deadline_s if slo is not None else None
+
+    def _wrap(
+        self,
+        slpf: SLPF,
+        *,
+        bucket: Optional[Tuple[int, int]] = None,
+        latency_s: Optional[float] = None,
+    ) -> ParseResult:
+        return ParseResult(
+            forest=slpf,
+            backend=self.backend_name,
+            bucket=bucket,
+            latency_s=latency_s,
+            n_chunks=self.config.n_chunks,
+        )
+
+    @property
+    def parse_service(self) -> ParseService:
+        """The batched request service (built lazily, facade-owned)."""
+        if self._parse_service is None:
+            c = self.config
+            self._parse_service = ParseService._internal(
+                self.engine,
+                max_batch=c.max_batch,
+                n_chunks=c.n_chunks,
+                max_pending=c.max_pending,
+            )
+        return self._parse_service
+
+    @property
+    def stream_service(self) -> StreamService:
+        """The streaming session service (built lazily, facade-owned)."""
+        if self._stream_service is None:
+            c = self.config
+            self._stream_service = StreamService._internal(
+                self.engine,
+                max_batch=c.max_batch,
+                first_seal_len=c.first_seal_len,
+                max_seal_len=c.max_seal_len,
+                cache_budget_bytes=c.cache_budget_bytes,
+                max_pending_chars=c.max_pending_chars,
+            )
+        return self._stream_service
+
+    # ---------------------------------------------------------------- parse
+
+    def submit(
+        self, text, *, deadline_s: Optional[float] = None
+    ) -> ParseTicket:
+        """Deadline-aware asynchronous submission; returns a ``ParseTicket``.
+
+        Admission runs NOW: a bucket whose observed p99 exceeds the
+        remaining ``deadline_s`` raises ``AdmissionError`` (typed, before
+        any queueing); ``max_pending`` overflow raises ``BudgetExceeded``.
+        No deadline (and no config default) admits unconditionally.
+        """
+        if deadline_s is None:
+            deadline_s = self._default_deadline_s()
+        svc = self.parse_service
+        req = svc.submit_request(text, deadline_s=deadline_s)
+        return ParseTicket(self, svc, req, deadline_s=deadline_s)
+
+    def parse(self, text, *, deadline_s: Optional[float] = None) -> ParseResult:
+        """Parse one text synchronously through the same admission path as
+        ``submit`` (stats/SLO observe it).
+
+        On a mesh config this is the long-text route: the engine's
+        single-text distributed program shards the chunk dim over EVERY
+        chunk mesh axis ('pod' × 'data') — ``parse_batch`` instead keeps
+        batch slots over 'data' and chunks over 'pod'.
+        """
+        if self.engine.mesh is not None:
+            from .serve.parse_service import BucketStats
+
+            if deadline_s is None:
+                deadline_s = self._default_deadline_s()
+            svc = self.parse_service
+            classes = self.engine.classes_of_text(text)
+            bucket = self.engine.bucket_shape(len(classes), self.config.n_chunks)
+            svc._admit(bucket, deadline_s)
+            stats = svc._buckets.setdefault(bucket, BucketStats())
+            t0 = time.perf_counter()
+            slpf = self.engine.parse(classes, n_chunks=self.config.n_chunks)
+            latency = time.perf_counter() - t0
+            stats.record(latency)       # admission/SLO learn this route too
+            return self._wrap(slpf, bucket=bucket, latency_s=latency)
+        return self.submit(text, deadline_s=deadline_s).result()
+
+    def parse_batch(
+        self, texts: Sequence, *, deadline_s: Optional[float] = None
+    ) -> List[ParseResult]:
+        """Parse many texts through the bucket-batched service; results are
+        returned in input order.
+
+        Admission is all-or-nothing: if any text is rejected
+        (``AdmissionError``/``BudgetExceeded``), the already-queued ones are
+        cancelled before the error propagates — no orphaned requests are
+        left consuming the queue budget.
+        """
+        tickets: List[ParseTicket] = []
+        try:
+            for t in texts:
+                tickets.append(self.submit(t, deadline_s=deadline_s))
+        except Exception:
+            for ticket in tickets:
+                ticket.cancel()
+            raise
+        return [t.result() for t in tickets]
+
+    def open_stream(self) -> ParserStream:
+        """Open a streaming session (incremental appends over the shared
+        prefix-cache service); close it with ``.close()`` / ``with``."""
+        return ParserStream(self, self.stream_service, self.stream_service.open())
+
+    def count_accepting(self, text) -> int:
+        return self.parse(text).count_trees()
+
+    # ---------------------------------------------------------------- stats
+
+    def _slo_grade(self, buckets: Mapping) -> Dict[Any, Dict[str, Any]]:
+        slo = self.config.slo
+        out: Dict[Any, Dict[str, Any]] = {}
+        for bucket, b in buckets.items():
+            grade: Dict[str, Any] = {
+                "p50_s": b["p50_latency_s"],
+                "p99_s": b["p99_latency_s"],
+                "queue_depth": b["queue_depth"],
+            }
+            if slo is not None and slo.p50_s is not None:
+                grade["p50_ok"] = b["p50_latency_s"] <= slo.p50_s
+            if slo is not None and slo.p99_s is not None:
+                grade["p99_ok"] = b["p99_latency_s"] <= slo.p99_s
+            out[bucket] = grade
+        return out
+
+    def stats(self) -> Dict[str, Any]:
+        """One aggregated view over both services + SLO conformance.
+
+        ``parse``/``stream`` are the raw service stats (present once the
+        corresponding service has been touched); ``slo.buckets`` grades every
+        observed bucket against the config targets (``p50_ok``/``p99_ok``
+        appear only when targets are set).
+        """
+        slo = self.config.slo
+        # evaluate each service's stats property ONCE: it rebuilds the full
+        # dict (queue scan + percentile windows), and two reads could even
+        # disagree if the queue moves between them
+        ps = self._parse_service.stats if self._parse_service is not None else None
+        ss = self._stream_service.stats if self._stream_service is not None else None
+        return {
+            "backend": self.backend_name,
+            "compile_count": self.compile_count,
+            "pending": (ps["pending"] if ps else 0) + (ss["pending"] if ss else 0),
+            "parse": ps,
+            "stream": ss,
+            "slo": {
+                "targets": dataclasses.asdict(slo) if slo is not None else None,
+                "parse_buckets": self._slo_grade(ps["buckets"] if ps else {}),
+                "stream_buckets": self._slo_grade(ss["buckets"] if ss else {}),
+            },
+        }
+
+
+__all__ = [
+    "AdmissionError",
+    "BudgetExceeded",
+    "ParseError",
+    "ParseResult",
+    "ParseTicket",
+    "Parser",
+    "ParserBackend",
+    "ParserConfig",
+    "ParserStream",
+    "SLOTargets",
+    "SLPF",
+    "SessionNotFound",
+    "get_backend",
+    "list_backends",
+    "register_backend",
+]

@@ -453,6 +453,11 @@ register_backend(PallasBackend)
 register_backend(PackedBackend)
 
 
+def list_backends() -> list:
+    """Sorted names of every registered parse backend."""
+    return sorted(_BACKENDS)
+
+
 def get_backend(backend: Union[str, ParserBackend]) -> ParserBackend:
     """Resolve a backend name (or pass an instance through)."""
     if isinstance(backend, ParserBackend):

@@ -71,7 +71,7 @@ from jax.sharding import NamedSharding, PartitionSpec
 
 from ..launch.mesh import mesh_axes_size
 from ..parallel.sharding import MeshRules, spec_axes
-from .engine import _next_pow2, join_with_col0, resolve_engine
+from .engine import _next_pow2, join_with_col0, _resolve_engine
 from .scan import linear_index
 from .slpf import SLPF
 
@@ -116,7 +116,7 @@ class DistributedEngine:
     """
 
     def __init__(self, matrices_or_engine, mesh, *, backend=None, rules=None):
-        self.engine = resolve_engine(matrices_or_engine, backend)
+        self.engine = _resolve_engine(matrices_or_engine, backend)
         self.mesh = mesh
         self.rules = rules if rules is not None else MeshRules()
         # single-text route: the chunk dim takes every mesh axis the 'chunk'

@@ -396,11 +396,12 @@ class ParserEngine:
         return self.parse(text, n_chunks).count_trees()
 
 
-def resolve_engine(
+def _resolve_engine(
     matrices_or_engine,
     backend: Union[str, ParserBackend, None],
     mesh=None,
     mesh_rules=None,
+    min_chunk_len: Optional[int] = None,
 ) -> ParserEngine:
     """Shared constructor contract of everything layered on the engine
     (ParseService, StreamingParser, StreamService): accept matrices / a
@@ -418,4 +419,29 @@ def resolve_engine(
         backend=backend if backend is not None else "jnp",
         mesh=mesh,
         mesh_rules=mesh_rules,
+        min_chunk_len=min_chunk_len if min_chunk_len is not None else 8,
     )
+
+
+def resolve_engine(
+    matrices_or_engine,
+    backend: Union[str, ParserBackend, None],
+    mesh=None,
+    mesh_rules=None,
+) -> ParserEngine:
+    """Deprecated public alias of the internal engine-resolution path.
+
+    The supported way to build the parse runtime is the ``repro.Parser``
+    facade (``repro/api.py``), which owns engine and service construction
+    from one declarative ``ParserConfig``.  This shim keeps pre-facade call
+    sites working one release longer.
+    """
+    import warnings
+
+    warnings.warn(
+        "repro: resolve_engine is deprecated — construct repro.Parser "
+        "(repro/api.py) instead; it owns engine/service construction",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    return _resolve_engine(matrices_or_engine, backend, mesh, mesh_rules)

@@ -63,7 +63,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .backend import ParserBackend
-from .engine import _next_pow2, resolve_engine
+from .engine import _next_pow2, _resolve_engine
 from .matrices import unpack_bits
 from .slpf import SLPF
 
@@ -100,7 +100,7 @@ class StreamingParser:
         mesh=None,
         mesh_rules=None,
     ):
-        self.engine = resolve_engine(matrices_or_engine, backend, mesh, mesh_rules)
+        self.engine = _resolve_engine(matrices_or_engine, backend, mesh, mesh_rules)
         self.first_seal_len = _next_pow2(max(1, first_seal_len))
         if max_seal_len is None:
             self.max_seal_len = None
@@ -212,9 +212,13 @@ class StreamingParser:
         batched reach the serving layer ran across sessions.
         """
         if len(piece) > self.tail_room():
-            raise ValueError(
+            from ..errors import BudgetExceeded
+
+            raise BudgetExceeded(
                 f"piece of {len(piece)} chars crosses the seal boundary "
-                f"(tail_room={self.tail_room()}); split it first"
+                f"(tail_room={self.tail_room()}); split it first",
+                budget=self.tail_room(),
+                requested=len(piece),
             )
         self._ensure_cache()
         self._tail_product = self.engine.phases.compose(product, self._tail_product)

@@ -16,11 +16,21 @@ up to ``max_batch`` — mixed-length traffic aggregates into full batches
 without head-of-line blocking on rare shapes.
 
 Instrumentation (``ParseService.stats``): queue depth (current and peak) and
-per-bucket served-count / batch-count / latency aggregates including p50/p99
-over a sliding sample window — the observables the ROADMAP's SLO item
-(latency targets, deadline-aware admission) builds on.
-``serve/stream_service.py`` exposes the same stats shape for streaming
-sessions.
+per-bucket served-count / queue-depth / latency aggregates including p50/p99
+over a sliding sample window.  A bucket appears in ``stats`` from the moment
+a request maps to it at submit — before the first serve — with ``served=0``
+and its live ``queue_depth``, so the deadline-admission policy below has a
+defined cold-start observable.  ``serve/stream_service.py`` exposes the same
+stats shape for streaming sessions.
+
+Admission (the ROADMAP SLO item): ``submit(text, deadline=...)`` rejects a
+request with ``repro.errors.AdmissionError`` when its bucket's observed p99
+latency already exceeds the remaining deadline (a cold bucket predicts 0.0
+and admits); ``max_pending`` bounds the queue with
+``repro.errors.BudgetExceeded``.  Policy knobs (per-bucket latency targets,
+default deadlines) live in ``repro/api.py``'s ``ParserConfig`` — the facade
+is the supported construction path; building ``ParseService`` directly is
+deprecated.
 
 Distribution: ``ParseService(..., mesh=...)`` builds a mesh-aware engine, so
 every served bucket runs sharded-batched (batch slots over 'data', chunks
@@ -36,14 +46,16 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from collections import deque
 from typing import Deque, Dict, Hashable, List, Optional, Tuple, Union
 
 import numpy as np
 
 from ..core.backend import ParserBackend
-from ..core.engine import resolve_engine
+from ..core.engine import _resolve_engine
 from ..core.slpf import SLPF
+from ..errors import AdmissionError, BudgetExceeded
 
 # Per-bucket latency sample window for the p50/p99 estimates: percentiles are
 # exact over the most recent LATENCY_WINDOW served requests (a sorted-window
@@ -92,9 +104,22 @@ class BucketStats:
 
 
 def bucket_stats_dict(
-    buckets: Dict[Hashable, BucketStats]
+    buckets: Dict[Hashable, BucketStats],
+    queue_depth: Optional[Dict[Hashable, int]] = None,
 ) -> Dict[Hashable, Dict[str, float]]:
-    return {b: s.as_dict() for b, s in sorted(buckets.items())}
+    """Per-bucket stat dicts, each carrying its live ``queue_depth``.
+
+    Buckets with no queued work report ``queue_depth`` 0 (they are NOT
+    omitted): a bucket enters the map at submit time, so admission and SLO
+    policy always see a defined entry — including before the first serve.
+    """
+    depth = queue_depth or {}
+    out = {}
+    for b, s in sorted(buckets.items()):
+        d = s.as_dict()
+        d["queue_depth"] = depth.get(b, 0)
+        out[b] = d
+    return out
 
 
 @dataclasses.dataclass
@@ -119,19 +144,38 @@ class ParseRequest:
 class ParseService:
     """Bucket-batched request scheduler over ``ParserEngine.parse_batch``."""
 
-    def __init__(
+    def __init__(self, *args, **kwargs):
+        warnings.warn(
+            "repro: constructing ParseService directly is deprecated — use "
+            "repro.Parser (repro/api.py): parser.submit()/parse_batch() own "
+            "service construction and admission policy",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        self._init(*args, **kwargs)
+
+    @classmethod
+    def _internal(cls, *args, **kwargs) -> "ParseService":
+        """Facade-owned construction path (no deprecation warning)."""
+        self = object.__new__(cls)
+        self._init(*args, **kwargs)
+        return self
+
+    def _init(
         self,
         matrices_or_engine,
         *,
         backend: Union[str, ParserBackend, None] = None,
         max_batch: int = 8,
         n_chunks: int = 8,
+        max_pending: Optional[int] = None,
         mesh=None,
         mesh_rules=None,
     ):
-        self.engine = resolve_engine(matrices_or_engine, backend, mesh, mesh_rules)
+        self.engine = _resolve_engine(matrices_or_engine, backend, mesh, mesh_rules)
         self.max_batch = max(1, max_batch)
         self.n_chunks = n_chunks
+        self.max_pending = max_pending
         self._queue: Deque[ParseRequest] = deque()
         self._done: List[ParseRequest] = []
         self._next_rid = 0
@@ -141,22 +185,85 @@ class ParseService:
 
     # ------------------------------------------------------------- admission
 
-    def submit(self, text: Union[bytes, str]) -> int:
-        """Enqueue a text; returns its request id."""
-        rid = self._next_rid
-        self._next_rid += 1
-        classes = self.engine.classes_of_text(text)
-        self._queue.append(
-            ParseRequest(
-                rid=rid,
-                text=text,
-                classes=classes,
-                bucket=self.engine.bucket_shape(len(classes), self.n_chunks),
-                submitted_at=time.perf_counter(),
+    def admission_p99_s(self, bucket: Tuple[int, int]) -> float:
+        """Observed p99 latency of one bucket — the admission predictor.
+
+        Defined for EVERY bucket, including one no request has mapped to
+        yet: a cold bucket has an empty sample window and predicts 0.0
+        (optimistic — the first request is always admitted and its latency
+        seeds the window).
+        """
+        stats = self._buckets.get(bucket)
+        return stats.latency_quantile_s(99.0) if stats is not None else 0.0
+
+    def _admit(self, bucket: Tuple[int, int], deadline_s: Optional[float]) -> None:
+        """Deadline-aware admission: reject work predicted to miss its deadline.
+
+        ``deadline_s`` is the request's REMAINING latency budget in seconds.
+        The predictor is the bucket's observed p99 over the sliding window —
+        if p99 already exceeds the budget (or the budget is already blown),
+        serving the request would almost surely miss, so it is rejected
+        up-front with ``AdmissionError`` instead of wasting a batch slot.
+        """
+        if self.max_pending is not None and len(self._queue) >= self.max_pending:
+            raise BudgetExceeded(
+                f"parse queue is at its max_pending budget ({self.max_pending})",
+                budget=self.max_pending,
+                requested=len(self._queue) + 1,
             )
+        if deadline_s is None:
+            return
+        predicted = self.admission_p99_s(bucket)
+        if deadline_s <= 0.0 or predicted > deadline_s:
+            raise AdmissionError(
+                f"bucket {bucket} p99 {predicted * 1e3:.1f}ms exceeds the "
+                f"remaining deadline {deadline_s * 1e3:.1f}ms",
+                bucket=bucket,
+                deadline_s=deadline_s,
+                predicted_s=predicted,
+            )
+
+    def submit_request(
+        self, text: Union[bytes, str], *, deadline_s: Optional[float] = None
+    ) -> ParseRequest:
+        """Enqueue a text; returns its (live) request record.
+
+        With ``deadline_s`` the request passes deadline-aware admission
+        first and may raise ``AdmissionError``/``BudgetExceeded``; the
+        returned object's ``slpf``/``latency_s`` fields fill in place when a
+        ``step`` serves its bucket.
+        """
+        classes = self.engine.classes_of_text(text)
+        bucket = self.engine.bucket_shape(len(classes), self.n_chunks)
+        self._admit(bucket, deadline_s)
+        # the bucket is observable (served=0, queue_depth>0) from this moment
+        self._buckets.setdefault(bucket, BucketStats())
+        req = ParseRequest(
+            rid=self._next_rid,
+            text=text,
+            classes=classes,
+            bucket=bucket,
+            submitted_at=time.perf_counter(),
         )
+        self._next_rid += 1
+        self._queue.append(req)
         self._peak_queue_depth = max(self._peak_queue_depth, len(self._queue))
-        return rid
+        return req
+
+    def submit(
+        self, text: Union[bytes, str], *, deadline_s: Optional[float] = None
+    ) -> int:
+        """Enqueue a text; returns its request id (see ``submit_request``)."""
+        return self.submit_request(text, deadline_s=deadline_s).rid
+
+    def cancel(self, rid: int) -> bool:
+        """Drop a not-yet-served request from the queue; False if already
+        served (or unknown — a served rid may have been reaped)."""
+        for req in self._queue:
+            if req.rid == rid:
+                self._queue.remove(req)
+                return True
+        return False
 
     def _bucket_of(self, req: ParseRequest) -> Tuple[int, int]:
         if req.bucket is None:  # externally-constructed request
@@ -202,6 +309,15 @@ class ParseService:
         out, self._done = self._done, []
         return out
 
+    def reap(self, req: ParseRequest) -> None:
+        """Drop one finished request from the completion buffer (the ticket
+        path collects results one by one; without this, a long-lived facade
+        would accumulate every served request until the next ``run``)."""
+        try:
+            self._done.remove(req)
+        except ValueError:
+            pass
+
     # ------------------------------------------------------------------ stats
 
     @property
@@ -215,12 +331,22 @@ class ParseService:
 
     @property
     def stats(self) -> Dict:
-        """Queue-depth + per-bucket served/latency aggregates (SLO inputs)."""
+        """Queue-depth + per-bucket served/latency aggregates (SLO inputs).
+
+        Every bucket any request has ever mapped to is present — a bucket
+        queued but not yet served reports ``served=0`` with its live
+        ``queue_depth``, and an idle bucket reports ``queue_depth=0`` —
+        so admission always reads a defined entry (no cold-start KeyError).
+        """
+        depth: Dict[Tuple[int, int], int] = {}
+        for req in self._queue:
+            b = self._bucket_of(req)
+            depth[b] = depth.get(b, 0) + 1
         return {
             "backend": self.engine.backend.name,
             "pending": len(self._queue),
             "peak_queue_depth": self._peak_queue_depth,
             "batches_run": self.batches_run,
             "compile_count": self.compile_count,
-            "buckets": bucket_stats_dict(self._buckets),
+            "buckets": bucket_stats_dict(self._buckets, depth),
         }

@@ -39,6 +39,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from collections import deque
 from typing import Deque, Dict, List, Optional, Tuple, Union
 
@@ -46,9 +47,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.backend import ParserBackend
-from ..core.engine import _next_pow2, resolve_engine
+from ..core.engine import _next_pow2, _resolve_engine
 from ..core.slpf import SLPF
 from ..core.stream import StreamingParser
+from ..errors import AdmissionError, BudgetExceeded, SessionNotFound
 from .parse_service import BucketStats, bucket_stats_dict
 
 
@@ -79,7 +81,24 @@ class StreamSession:
 class StreamService:
     """Bucket-batched scheduler over many ``StreamingParser`` sessions."""
 
-    def __init__(
+    def __init__(self, *args, **kwargs):
+        warnings.warn(
+            "repro: constructing StreamService directly is deprecated — use "
+            "repro.Parser.open_stream() (repro/api.py); the facade owns "
+            "service construction and admission policy",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        self._init(*args, **kwargs)
+
+    @classmethod
+    def _internal(cls, *args, **kwargs) -> "StreamService":
+        """Facade-owned construction path (no deprecation warning)."""
+        self = object.__new__(cls)
+        self._init(*args, **kwargs)
+        return self
+
+    def _init(
         self,
         matrices_or_engine,
         *,
@@ -88,14 +107,16 @@ class StreamService:
         first_seal_len: int = 8,
         max_seal_len: Optional[int] = None,
         cache_budget_bytes: Optional[int] = None,
+        max_pending_chars: Optional[int] = None,
         mesh=None,
         mesh_rules=None,
     ):
-        self.engine = resolve_engine(matrices_or_engine, backend, mesh, mesh_rules)
+        self.engine = _resolve_engine(matrices_or_engine, backend, mesh, mesh_rules)
         self.max_batch = max(1, max_batch)
         self.first_seal_len = first_seal_len
         self.max_seal_len = max_seal_len
         self.cache_budget_bytes = cache_budget_bytes
+        self.max_pending_chars = max_pending_chars
 
         self._sessions: Dict[int, StreamSession] = {}
         self._next_sid = 0
@@ -123,6 +144,8 @@ class StreamService:
         return sid
 
     def close(self, sid: int) -> None:
+        if sid not in self._sessions:
+            raise SessionNotFound(sid)
         del self._sessions[sid]
 
     def _tick(self) -> int:
@@ -130,16 +153,61 @@ class StreamService:
         return self._seq
 
     def _session(self, sid: int) -> StreamSession:
-        return self._sessions[sid]
+        try:
+            return self._sessions[sid]
+        except KeyError:
+            raise SessionNotFound(sid) from None
 
     # --------------------------------------------------------------- append
 
-    def append(self, sid: int, text) -> int:
+    def admission_p99_s(self, bucket: int) -> float:
+        """Observed p99 append latency of one piece bucket (0.0 when cold —
+        same defined cold-start contract as ``ParseService.admission_p99_s``)."""
+        stats = self._buckets.get(bucket)
+        return stats.latency_quantile_s(99.0) if stats is not None else 0.0
+
+    def append(self, sid: int, text, *, deadline_s: Optional[float] = None) -> int:
         """Queue text onto a session; returns chars queued.  Work happens in
-        ``step``/``drain`` so concurrent sessions batch on the device."""
+        ``step``/``drain`` so concurrent sessions batch on the device.
+
+        ``deadline_s`` (remaining latency budget) runs deadline-aware
+        admission against the next piece's bucket: observed p99 over budget
+        (or a blown budget) raises ``AdmissionError`` before anything is
+        queued.  ``max_pending_chars`` bounds the cross-session backlog with
+        ``BudgetExceeded``.
+        """
         s = self._session(sid)
         classes = self.engine.classes_of_text(text)
         if len(classes):
+            if (
+                self.max_pending_chars is not None
+                and self.pending_chars + len(classes) > self.max_pending_chars
+            ):
+                raise BudgetExceeded(
+                    f"append of {len(classes)} chars would exceed the "
+                    f"max_pending_chars budget ({self.max_pending_chars}; "
+                    f"{self.pending_chars} queued)",
+                    budget=self.max_pending_chars,
+                    requested=self.pending_chars + len(classes),
+                )
+            # the admission-relevant device work is the session's NEXT
+            # piece — bucket it exactly like the scheduler will
+            piece_len = min(s.parser.tail_room(), len(classes))
+            bucket = s.parser._bucket_len(piece_len)
+            if deadline_s is not None:
+                predicted = self.admission_p99_s(bucket)
+                if deadline_s <= 0.0 or predicted > deadline_s:
+                    raise AdmissionError(
+                        f"stream bucket {bucket} p99 {predicted * 1e3:.1f}ms "
+                        f"exceeds the remaining deadline {deadline_s * 1e3:.1f}ms",
+                        bucket=bucket,
+                        deadline_s=deadline_s,
+                        predicted_s=predicted,
+                    )
+            # the bucket is observable (served=0, queue_depth>0) from this
+            # moment — deadline or not (same cold-start contract as
+            # ParseService.submit_request)
+            self._buckets.setdefault(bucket, BucketStats())
             if not s.pending:
                 s.arrival_seq = self._tick()
             s.pending.append(
@@ -322,6 +390,11 @@ class StreamService:
         ``peak_queue_depth`` count append *requests* (bucket key = piece
         length k) — plus cache/eviction observables for the bytes budget
         (``pending_chars`` carries the char-level backlog)."""
+        depth: Dict[int, int] = {}
+        for s in self._sessions.values():
+            if s.pending:
+                b = self._piece_bucket(s)
+                depth[b] = depth.get(b, 0) + len(s.pending)
         return {
             "backend": self.engine.backend.name,
             "sessions": len(self._sessions),
@@ -333,5 +406,5 @@ class StreamService:
             "bytes_cached": self.bytes_cached,
             "evictions": self.evictions,
             "rebuilds": sum(s.parser.rebuilds for s in self._sessions.values()),
-            "buckets": bucket_stats_dict(self._buckets),
+            "buckets": bucket_stats_dict(self._buckets, depth),
         }

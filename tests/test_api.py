@@ -1,0 +1,426 @@
+"""Public API facade (repro/api.py): config, results, tickets, admission.
+
+Covers the acceptance bars of the API redesign:
+  * ``ParserConfig`` validation failures (bad backend, unresolvable mesh
+    axes, non-pow2 bucket policy) and exact ``to_dict``/``from_dict``
+    round-trips producing bit-identical parses;
+  * facade-vs-direct-engine conformance (the full-corpus version lives in
+    ``tests/test_conformance.py`` where the facade is a fifth route);
+  * deadline-aware admission: admitted under a loose deadline, typed
+    ``AdmissionError`` under a blown one, and a DEFINED cold-start path
+    (un-served buckets are reported with queue depth instead of omitted);
+  * the typed error hierarchy (``repro.errors``) raised by both services;
+  * ``repro``'s lazy top-level exports (no jax import cost at ``import
+    repro`` time).
+"""
+
+import json
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import repro
+from repro.api import ParseTicket, Parser, ParserConfig, SLOTargets
+from repro.core.engine import ParserEngine, resolve_engine
+from repro.errors import (
+    AdmissionError,
+    BudgetExceeded,
+    ParseError,
+    SessionNotFound,
+)
+from repro.serve.parse_service import ParseService
+from repro.serve.stream_service import StreamService
+
+PATTERN = "(a|b|ab)+"
+
+
+@pytest.fixture(scope="module")
+def parser():
+    return Parser(ParserConfig(regex=PATTERN, n_chunks=4))
+
+
+# ---------------------------------------------------------------- config
+
+
+def test_config_rejects_bad_backend():
+    with pytest.raises(ValueError, match="unknown parse backend"):
+        ParserConfig(regex=PATTERN, backend="cuda-tensorcore")
+
+
+def test_config_rejects_kernel_on_jnp():
+    with pytest.raises(ValueError, match="kernel"):
+        ParserConfig(regex=PATTERN, backend="jnp", kernel=True)
+
+
+def test_config_rejects_non_pow2_buckets():
+    with pytest.raises(ValueError, match="power of two"):
+        ParserConfig(regex=PATTERN, min_chunk_len=12)
+    with pytest.raises(ValueError, match="power of two"):
+        ParserConfig(regex=PATTERN, first_seal_len=6)
+    with pytest.raises(ValueError, match="power of two"):
+        ParserConfig(regex=PATTERN, max_seal_len=48)
+
+
+def test_config_rejects_unresolvable_mesh_axes():
+    # 'model' is a real production axis but the declared parse mesh is
+    # ('pod', 'data') — the chunk rule cannot resolve on it
+    with pytest.raises(ValueError, match="does not resolve"):
+        ParserConfig(regex=PATTERN, mesh="host", mesh_rules={"chunk": ("model",)})
+
+
+def test_config_rejects_mesh_rules_without_mesh():
+    with pytest.raises(ValueError, match="requires mesh"):
+        ParserConfig(regex=PATTERN, mesh_rules={"chunk": ("pod",)})
+
+
+def test_config_rejects_bad_mesh_and_empty_regex():
+    with pytest.raises(ValueError, match="mesh"):
+        ParserConfig(regex=PATTERN, mesh="tpu-pod-slice")
+    with pytest.raises(ValueError, match="regex"):
+        ParserConfig(regex="")
+    with pytest.raises(ValueError, match="n_chunks"):
+        ParserConfig(regex=PATTERN, n_chunks=0)
+
+
+def test_config_rejects_bad_slo():
+    with pytest.raises(ValueError, match="positive"):
+        SLOTargets(p99_s=-1.0)
+    with pytest.raises(ValueError, match="p50_s"):
+        SLOTargets(p50_s=2.0, p99_s=1.0)
+
+
+def test_config_dict_round_trip_exact():
+    cfg = ParserConfig(
+        regex=PATTERN,
+        backend="packed",
+        kernel=True,
+        n_chunks=4,
+        max_batch=16,
+        first_seal_len=4,
+        max_seal_len=64,
+        cache_budget_bytes=1 << 20,
+        max_pending=32,
+        max_pending_chars=4096,
+        slo=SLOTargets(p50_s=0.1, p99_s=0.5, default_deadline_s=2.0),
+    )
+    d = cfg.to_dict()
+    # JSON-able all the way through (the declarative contract)
+    cfg2 = ParserConfig.from_dict(json.loads(json.dumps(d)))
+    assert cfg2 == cfg and cfg2.to_dict() == d
+    with pytest.raises(ValueError, match="unknown ParserConfig keys"):
+        ParserConfig.from_dict({**d, "max_qps": 100})
+
+
+def test_config_mesh_rules_round_trip():
+    cfg = ParserConfig(
+        regex=PATTERN, mesh="host", mesh_rules={"chunk": ("pod",), "batch": "data"}
+    )
+    d = json.loads(json.dumps(cfg.to_dict()))
+    assert ParserConfig.from_dict(d) == cfg
+    rules = cfg.build_mesh_rules()
+    assert rules.rules["chunk"] == "pod" and rules.rules["batch"] == "data"
+
+
+def test_round_trip_config_parses_bit_identical():
+    cfg = ParserConfig(regex=PATTERN, backend="packed", n_chunks=4)
+    p1 = Parser(cfg)
+    p2 = Parser(ParserConfig.from_dict(json.loads(json.dumps(cfg.to_dict()))))
+    for text in ["", "abab", "ab" * 20, "x", "ba"]:
+        a, b = p1.parse(text), p2.parse(text)
+        assert np.array_equal(a.forest.pack(), b.forest.pack()), text
+        assert a.ok == b.ok
+
+
+# ------------------------------------------------------- facade vs engine
+
+
+def test_facade_matches_direct_engine(parser):
+    eng = ParserEngine(parser.matrices)
+    for text in ["", "abab", "ab" * 40, "~", "ba" * 7]:
+        res = parser.parse(text)
+        direct = eng.parse(text, n_chunks=4)
+        assert np.array_equal(res.forest.pack(), direct.pack()), text
+        assert res.ok == direct.accepted
+        assert res.backend == "jnp" and res.bucket is not None
+        assert res.latency_s is not None and res.latency_s >= 0.0
+
+
+def test_parse_batch_preserves_order(parser):
+    texts = ["abab", "", "b", "a" * 23, "ab" * 40, "ba"]
+    results = parser.parse_batch(texts)
+    eng = ParserEngine(parser.matrices)
+    for text, res in zip(texts, results):
+        assert np.array_equal(res.forest.pack(), eng.parse(text, n_chunks=4).pack())
+
+
+def test_result_accessors(parser):
+    res = parser.parse("abab")
+    assert res.ok and res.count_trees() == 4
+    assert len(res.trees(limit=2)) == 2
+    assert all(isinstance(t, str) for t in res.trees(limit=2))
+    assert all(isinstance(t, tuple) for t in res.trees(limit=2, paths=True))
+    assert res.matches(1) == [(0, 4)]       # outermost operator pair
+    assert res.slpf is res.forest
+
+
+def test_result_children_reports_direct_nesting():
+    p = Parser(ParserConfig(regex="((a)(b))+", n_chunks=2))
+    res = p.parse("abab")
+    outer = min(p.groups)
+    spans = res.matches(outer)
+    assert (0, 2) in spans
+    kids = res.children((0, 2))
+    kid_spans = {(st, en) for _, st, en in kids}
+    assert (0, 1) in kid_spans and (1, 2) in kid_spans
+    # direct children only: nothing from the sibling iteration leaks in,
+    # and a pair is never its own child (same-span NESTED pairs are fine —
+    # an operator pair inside the group shares its span)
+    assert (2, 3) not in kid_spans and (2, 4) not in kid_spans
+    assert (outer, 0, 2) not in kids
+
+
+def test_stream_facade_matches_cold_parse(parser):
+    eng = ParserEngine(parser.matrices)
+    with parser.open_stream() as stream:
+        prefix = ""
+        for piece in ["ab", "ab", "abab", "b"]:
+            stream.append(piece)
+            prefix += piece
+        res = stream.result()
+        assert np.array_equal(res.forest.pack(), eng.parse(prefix, n_chunks=4).pack())
+        assert stream.accepted == res.ok
+    with pytest.raises(SessionNotFound):
+        parser.stream_service.slpf(stream.sid)   # closed on __exit__
+
+
+# ---------------------------------------------------------------- tickets
+
+
+def test_ticket_done_result_cancel(parser):
+    t1 = parser.submit("abab")
+    t2 = parser.submit("baba")
+    assert not t1.done() and not t2.done()
+    assert t2.cancel() is True               # never served
+    r1 = t1.result()
+    assert t1.done() and r1.ok
+    assert t1.cancel() is False              # too late — already served
+    with pytest.raises(ParseError, match="cancelled"):
+        t2.result()
+    assert isinstance(t1, ParseTicket)
+
+
+# -------------------------------------------------------------- admission
+
+
+def test_admission_loose_deadline_accepted(parser):
+    res = parser.parse("abab", deadline_s=30.0)
+    assert res.ok
+
+
+def test_admission_blown_deadline_rejected(parser):
+    svc = parser.parse_service
+    parser.parse("abab")                      # seed the bucket's window
+    bucket = svc.engine.bucket_shape(4, parser.config.n_chunks)
+    svc._buckets[bucket].record(0.5)          # observed slow sample
+    with pytest.raises(AdmissionError) as ei:
+        parser.submit("abab", deadline_s=1e-4)
+    assert ei.value.bucket == bucket
+    assert ei.value.predicted_s >= 0.5 and ei.value.deadline_s == 1e-4
+    with pytest.raises(AdmissionError):       # already-blown budget
+        parser.submit("abab", deadline_s=0.0)
+    assert isinstance(ei.value, ParseError)
+
+
+def test_admission_cold_start_bucket_is_defined():
+    p = Parser(ParserConfig(regex=PATTERN, n_chunks=4))
+    svc = p.parse_service
+    text = "ab" * 300                          # a bucket nothing has served
+    bucket = svc.engine.bucket_shape(len(text), p.config.n_chunks)
+    assert svc.admission_p99_s(bucket) == 0.0  # cold ⇒ optimistic predictor
+    ticket = p.submit(text, deadline_s=0.050)  # cold bucket admits
+    st = svc.stats
+    # the bucket is REPORTED before first serve: served=0, live queue depth
+    assert st["buckets"][bucket]["served"] == 0
+    assert st["buckets"][bucket]["queue_depth"] == 1
+    assert ticket.result().ok
+    st = svc.stats
+    assert st["buckets"][bucket]["served"] == 1
+    assert st["buckets"][bucket]["queue_depth"] == 0   # drained, not omitted
+
+
+def test_default_deadline_from_slo_config():
+    p = Parser(
+        ParserConfig(regex=PATTERN, n_chunks=4,
+                     slo=SLOTargets(default_deadline_s=60.0))
+    )
+    assert p.parse("abab").ok                 # admits under the default
+    bucket = p.parse_service.engine.bucket_shape(4, 4)
+    p.parse_service._buckets[bucket].record(90.0)
+    with pytest.raises(AdmissionError):       # default deadline now blown
+        p.submit("abab")
+
+
+def test_stream_admission_deadline():
+    p = Parser(ParserConfig(regex=PATTERN, first_seal_len=4))
+    stream = p.open_stream()
+    assert stream.append("ab", deadline_s=30.0) == 2
+    bucket = p.stream_service._session(stream.sid).parser._bucket_len(2)
+    from repro.serve.parse_service import BucketStats
+
+    p.stream_service._buckets.setdefault(bucket, BucketStats()).record(5.0)
+    with pytest.raises(AdmissionError):
+        stream.append("ab", deadline_s=1e-4)
+    assert stream.result().ok
+
+
+# ---------------------------------------------------------------- budgets
+
+
+def test_parse_budget_exceeded():
+    p = Parser(ParserConfig(regex=PATTERN, max_pending=2))
+    p.submit("ab")
+    p.submit("ba")
+    with pytest.raises(BudgetExceeded) as ei:
+        p.submit("abab")
+    assert ei.value.budget == 2
+    assert isinstance(ei.value, ValueError)   # old handlers keep working
+    p.parse_service.run()
+    assert p.submit("abab").result().ok       # drained queue admits again
+
+
+def test_stream_budget_exceeded():
+    p = Parser(ParserConfig(regex=PATTERN, max_pending_chars=4))
+    stream = p.open_stream()
+    stream.append("ab")
+    with pytest.raises(BudgetExceeded):
+        stream.append("abab")                 # 2 queued + 4 > 4
+
+
+def test_stream_cold_bucket_reported_without_deadline():
+    """A queued-but-unserved stream bucket appears in stats (served=0 with
+    its live queue depth) even when the append carried NO deadline."""
+    p = Parser(ParserConfig(regex=PATTERN, first_seal_len=4))
+    stream = p.open_stream()
+    stream.append("ab")                       # no deadline_s
+    st = p.stream_service.stats
+    assert st["buckets"], "cold bucket omitted from stream stats"
+    (bucket,) = st["buckets"]
+    assert st["buckets"][bucket]["served"] == 0
+    assert st["buckets"][bucket]["queue_depth"] == 1
+    assert stream.result().ok is not None     # drains fine afterwards
+
+
+def test_parse_batch_admission_failure_cancels_queued():
+    """A mid-batch rejection must not leave orphaned queued requests
+    consuming the max_pending budget."""
+    p = Parser(ParserConfig(regex=PATTERN, max_pending=2))
+    with pytest.raises(BudgetExceeded):
+        p.parse_batch(["ab", "ba", "abab"])   # third submit overflows
+    assert p.parse_service.pending == 0       # first two were cancelled
+    assert p.parse("abab").ok                 # budget fully available again
+
+
+def test_ticket_records_admitted_deadline():
+    p = Parser(ParserConfig(regex=PATTERN))
+    assert p.submit("ab", deadline_s=0.5).deadline_s == 0.5
+    assert p.submit("ab").deadline_s is None
+    p2 = Parser(ParserConfig(regex=PATTERN,
+                             slo=SLOTargets(default_deadline_s=3.0)))
+    assert p2.submit("ab").deadline_s == 3.0  # config default applied
+
+
+def test_session_not_found_is_typed_and_keyerror():
+    p = Parser(ParserConfig(regex=PATTERN))
+    with pytest.raises(SessionNotFound):
+        p.stream_service.append(999, "ab")
+    with pytest.raises(KeyError):             # back-compat
+        p.stream_service.slpf(999)
+    with pytest.raises(SessionNotFound):
+        p.stream_service.close(999)
+
+
+# ------------------------------------------------------------------ stats
+
+
+def test_stats_aggregates_both_services():
+    p = Parser(
+        ParserConfig(regex=PATTERN, n_chunks=4,
+                     slo=SLOTargets(p50_s=10.0, p99_s=20.0))
+    )
+    p.parse("abab")
+    with p.open_stream() as stream:
+        stream.append("abab")
+        stream.result()
+        st = p.stats()
+        assert st["backend"] == "jnp"
+        assert st["parse"]["batches_run"] >= 1
+        assert st["stream"]["sessions"] == 1
+        assert st["slo"]["targets"]["p99_s"] == 20.0
+        for grade in st["slo"]["parse_buckets"].values():
+            assert grade["p50_ok"] and grade["p99_ok"]   # loose targets
+            assert grade["queue_depth"] == 0
+        assert st["slo"]["stream_buckets"]               # graded too
+        assert st["pending"] == 0
+
+
+def test_stats_before_any_service_touch():
+    p = Parser(ParserConfig(regex=PATTERN))
+    st = p.stats()
+    assert st["parse"] is None and st["stream"] is None
+    assert st["slo"]["parse_buckets"] == {} and st["pending"] == 0
+
+
+# ------------------------------------------------------- deprecation shims
+
+
+def test_direct_service_construction_warns(parser):
+    with pytest.warns(DeprecationWarning, match="repro:"):
+        ParseService(parser.matrices)
+    with pytest.warns(DeprecationWarning, match="repro:"):
+        StreamService(parser.matrices)
+    with pytest.warns(DeprecationWarning, match="repro:"):
+        resolve_engine(parser.matrices, None)
+
+
+def test_facade_path_does_not_warn(recwarn):
+    import warnings
+
+    p = Parser(ParserConfig(regex=PATTERN, n_chunks=4))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        p.parse("abab")
+        with p.open_stream() as stream:
+            stream.append("ab")
+            stream.result()
+
+
+# ------------------------------------------------------------ lazy exports
+
+
+def test_top_level_exports_resolve():
+    for name in repro.__all__:
+        assert getattr(repro, name) is not None, name
+    assert repro.Parser is Parser
+    assert repro.list_backends() == sorted(repro.list_backends())
+    assert {"jnp", "pallas", "packed"} <= set(repro.list_backends())
+
+
+def test_import_repro_is_jax_free():
+    """``import repro`` (and repro.errors) must not pay the jax import."""
+    code = (
+        "import sys; import repro; "
+        # attribute access on a COLD import must resolve the submodule
+        "assert issubclass(repro.errors.SessionNotFound, KeyError); "
+        "assert 'jax' not in sys.modules, 'import repro pulled in jax'; "
+        "assert repro.api.__name__ == 'repro.api'; "   # api pays jax, lazily
+        "assert 'jax' in sys.modules; "
+        "print('ok')"
+    )
+    out = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True, text=True, timeout=120,
+    )
+    assert out.returncode == 0, out.stderr
+    assert out.stdout.strip() == "ok"

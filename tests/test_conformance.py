@@ -4,7 +4,7 @@ One check, quantified over the whole system: for a corpus of REs (fixed +
 REgen-random; hypothesis-driven when installed, a fixed seed corpus always)
 and adversarial texts (empty, single-char, seal-boundary lengths, corrupted /
 non-matching, long valid), EVERY backend in the ``core/backend.py`` registry
-must produce bit-identical SLPFs across all four execution routes:
+must produce bit-identical SLPFs across all five execution routes:
 
   fused        ``ParserEngine.parse`` (one jitted three-phase program)
   phase-split  ``ParserEngine.phases`` reach → join → build&merge run as
@@ -12,6 +12,8 @@ must produce bit-identical SLPFs across all four execution routes:
   streaming    ``core/stream.py`` incremental appends + ``current_slpf``
   mesh         ``ParserEngine(mesh=...)`` (1-device mesh: the shard_map
                programs with the product-stack all-gather resident)
+  facade       ``repro.Parser`` (repro/api.py) — the public API path through
+               ``submit``/``ParseTicket`` and the bucket-batched service
 
 and the SLPF's tree set must equal ``tests/oracle.py``'s brute-force LST
 enumeration (checked on oracle-sized texts; longer texts are anchored to the
@@ -29,6 +31,7 @@ import pytest
 import jax.numpy as jnp
 
 from oracle import enumerate_lsts
+from repro.api import Parser, ParserConfig
 from repro.core.backend import _BACKENDS
 from repro.core.engine import ParserEngine
 from repro.core.numbering import number_regex
@@ -75,6 +78,19 @@ def _engine(key, backend, mesh=False):
             art.matrices,
             backend=backend,
             mesh=make_parse_mesh() if mesh else None,
+        )
+    return _cache[ck]
+
+
+def _facade(key, backend):
+    """The public-API route: a ``repro.Parser`` over the same matrices."""
+    ck = ("facade", key, backend)
+    if ck not in _cache:
+        art, _, _ = _artifacts(key)
+        _cache[ck] = Parser.from_matrices(
+            art.matrices,
+            ParserConfig(regex=f"<conformance:{key}>", backend=backend,
+                         n_chunks=N_CHUNKS),
         )
     return _cache[ck]
 
@@ -162,6 +178,11 @@ def _check_text(key, backend, text, mesh_engine=None):
     assert np.array_equal(split.pack(), fused.pack()), (key, backend, text)
     streamed = _stream_parse(eng, text)
     assert np.array_equal(streamed.pack(), fused.pack()), (key, backend, text)
+
+    # facade route: the public repro.Parser API (ticketed service path)
+    res = _facade(key, backend).parse(text)
+    assert np.array_equal(res.forest.pack(), fused.pack()), (key, backend, text)
+    assert res.ok == fused.accepted and res.backend == backend
 
     # mesh route (1-device): same program placed through shard_map
     if mesh_engine is not None:
