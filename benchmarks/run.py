@@ -21,6 +21,10 @@ machine.  Mapping to the paper:
   packed_throughput       — bit-packed uint32 backend vs jnp f32 at ℓ=257
                             states: bit-identity gate + SLPF-path bytes
                             moved (≥8× cut gate; packing gives 32×)
+  speculation_throughput  — sparse feasible-start backend vs dense packed at
+                            ℓ=257: bit-identity gate + strictly-fewer
+                            product-path bytes on REs whose feasible width
+                            < ℓp/2; writes BENCH_speculation.json
   recognizer      Fig. 16r — recognition cost (reach+join only)
   memory          App. C   — SLPF bytes/char, packed and compressed
   engine_roofline §Roofline— per-cell terms (from the dry-run JSON)
@@ -408,6 +412,142 @@ def bench_packed_throughput(rows, quick, smoke=False):
                      f"ms n={n} compiles={p.compile_count}"))
 
 
+def bench_speculation_throughput(rows, quick, smoke=False):
+    """Speculation-width reduction: sparse feasible-start backend at ℓ=257.
+
+    Two benchmark REs at exactly ℓ = 257 segments (ℓp = 288, W = 9):
+
+      e125    ``(a|b)*a(a|b){125}``  — a 2-letter automaton whose classes
+              admit ~ℓ/2 start states (width 129 < ℓp/2 = 144: a qualifying
+              but near-worst case for the reduction);
+      cyc25   a 25-letter cyclic literal tuned to ℓ = 257 — each class
+              admits ~ℓ/25 states (width 12), the PaREM regime where
+              boundary information prunes speculation hard.
+
+    Gates (the CI smoke invocation runs all of them):
+      * sparse SLPF bit-identical to the jnp oracle on both REs;
+      * product-path bytes moved (reach output = join input = streaming
+        cache entry = all-gather payload) STRICTLY below the dense packed
+        backend at ℓ=257 on every RE whose measured feasible width < ℓp/2
+        — the acceptance bar; both REs qualify.
+
+    Also reports measured speculation width (mean/max vs ℓp) and parse
+    wall-clock per backend (CPU numbers gauge overhead only; the bytes rows
+    are the TPU-relevant signal), and writes the whole measurement set as
+    machine-readable ``BENCH_speculation.json`` at the repo root — the first
+    entry of the perf trajectory ROADMAP asks for.
+    """
+    import string
+
+    import jax.numpy as jnp
+
+    from repro.api import Parser, ParserConfig
+    from repro.core.matrices import feasible_start_widths
+    from repro.core.segments import compute_segments
+
+    unit25 = string.ascii_lowercase[:25] * 10 + "abcd"   # tuned: ℓ = 257
+    cases = {
+        "e125": ("(a|b)*a(a|b){125}",
+                 lambda rng, n: bytes(rng.choice([97, 98], size=n))),
+        "cyc25": (f"({unit25})*",
+                  lambda rng, n: (unit25.encode()
+                                  * (n // len(unit25) + 1))[: n - n % len(unit25)]),
+    }
+    n = 300 if smoke else (2_000 if quick else 50_000)
+    report = {"ell_target": 257, "n_chars": n, "cases": {}}
+
+    for cname, (pattern, make_text) in cases.items():
+        table = compute_segments(pattern)
+        ell = table.n
+        p_j = Parser.from_matrices(
+            table, ParserConfig(regex=f"<{cname}>", n_chunks=8)
+        )
+        p_p = Parser.from_matrices(
+            p_j.matrices,
+            ParserConfig(regex=f"<{cname}>", backend="packed", n_chunks=8),
+        )
+        p_s = Parser.from_matrices(
+            p_j.matrices,
+            ParserConfig(regex=f"<{cname}>", backend="sparse", n_chunks=8),
+        )
+        rng = np.random.default_rng(0)
+        text = make_text(rng, n)
+
+        base = p_j.parse(text)
+        got = p_s.parse(text)
+        ok = np.array_equal(base.forest.pack(), got.forest.pack())
+        rows.append((f"speculation.{cname}.bit_identical", ell, int(ok),
+                     "sparse == jnp SLPF (must be 1)"))
+        if not ok:
+            raise SystemExit(
+                f"speculation_throughput: sparse diverged from jnp on {cname}"
+            )
+
+        # product-path bytes: stacked chunk products off each backend's reach
+        eng_p, eng_s = p_p.engine, p_s.engine
+        classes = eng_p.classes_of_text(text)
+        c, k = eng_p.bucket_shape(len(classes), 8)
+        chunks = jnp.asarray(eng_p._pad_to(classes, c, k))
+        P_pck = eng_p.phases.reach(eng_p.tables.N, chunks)
+        P_sp = eng_s.phases.reach(eng_s.tables.N, chunks)
+        b_pck = int(P_pck.size) * P_pck.dtype.itemsize
+        b_sp = int(P_sp.size) * P_sp.dtype.itemsize
+        lp = int(eng_s.tables.ell_pad)
+        S = int(eng_s.backend._width)
+        widths = feasible_start_widths(eng_s.tables.N, np.asarray(chunks))
+        real = widths[widths >= 0]
+        w_mean = float(real.mean()) if real.size else 0.0
+        w_max = int(real.max()) if real.size else 0
+        rows.append((f"speculation.{cname}.width", ell,
+                     f"mean={w_mean:.1f} max={w_max}",
+                     f"feasible-start states vs ℓp={lp} (rows carried S={S})"))
+        rows.append((f"speculation.{cname}.product_stack_bytes.packed", ell,
+                     b_pck, f"(c={c}) dense packed product path"))
+        rows.append((f"speculation.{cname}.product_stack_bytes.sparse", ell,
+                     b_sp,
+                     f"{b_pck / b_sp:.2f}x fewer bytes (gate: strict < at "
+                     f"ℓ=257 when width < ℓp/2)"))
+        if w_max < lp // 2 and b_sp >= b_pck:
+            raise SystemExit(
+                f"speculation_throughput: sparse bytes {b_sp} not strictly "
+                f"below packed {b_pck} on {cname} (width {w_max} < ℓp/2)"
+            )
+
+        timings = {}
+        for bname, p in (("packed", p_p), ("sparse", p_s)):
+            p.parse(text)                      # warm the bucket program
+            dt = _time(lambda: p.parse(text), reps=2)
+            timings[bname] = dt
+            rows.append((f"speculation.{cname}.parse_ms.{bname}", n,
+                         round(dt * 1e3, 1),
+                         f"ms n={n} compiles={p.compile_count}"))
+
+        report["cases"][cname] = {
+            "pattern": pattern,
+            "ell": ell,
+            "ell_pad": lp,
+            "product_rows": S,
+            "bit_identical": bool(ok),
+            "speculation_width": {"mean": w_mean, "max": w_max,
+                                  "n_chunks_real": int(real.size)},
+            "bytes_moved": {
+                "packed": b_pck,
+                "sparse": b_sp,
+                "ratio_packed_over_sparse": b_pck / b_sp,
+                "n_stacked_chunks": int(c),
+            },
+            "throughput": {
+                bname: {"parse_s": dt, "chars_per_s": n / max(dt, 1e-9)}
+                for bname, dt in timings.items()
+            },
+        }
+
+    out = Path(__file__).resolve().parents[1] / "BENCH_speculation.json"
+    out.write_text(json.dumps(report, indent=2, sort_keys=True) + "\n")
+    rows.append(("speculation.json", 0, str(out.name),
+                 "machine-readable perf trajectory entry"))
+
+
 def bench_recognizer(rows, quick):
     from benchmarks.benchmark_res import BIGDATA_RE, make_text_exact
     from repro.core.reference import ParallelArtifacts
@@ -480,6 +620,9 @@ def main(argv=None) -> None:
             rows, args.quick, args.smoke
         ),
         "packed_throughput": lambda: bench_packed_throughput(
+            rows, args.quick, args.smoke
+        ),
+        "speculation_throughput": lambda: bench_speculation_throughput(
             rows, args.quick, args.smoke
         ),
         "recognizer": lambda: bench_recognizer(rows, args.quick),

@@ -17,16 +17,21 @@ fi
 # tests/test_stream_service.py — every incremental state vs the oracles —
 # and the backend-parametrized matrix in tests/test_backend.py, which
 # covers jnp, pallas-interpret AND the bit-packed uint32 backend).  The
-# conformance/packed modules are ignored HERE only because the explicit
-# gate below runs them — they stay tier-1 members for a plain `pytest`.
+# conformance/packed/sparse modules are ignored HERE only because the
+# explicit gate below runs them — they stay tier-1 members for a plain
+# `pytest`.
 python -m pytest "${PYTEST_ARGS[@]}" \
-    --ignore=tests/test_conformance.py --ignore=tests/test_packed.py
+    --ignore=tests/test_conformance.py --ignore=tests/test_packed.py \
+    --ignore=tests/test_sparse.py
 
-# cross-backend conformance harness: every registered backend bit-identical
+# cross-backend conformance harness: every registered backend (jnp, pallas,
+# packed AND sparse — the registry is enumerated at runtime) bit-identical
 # to the oracle across fused / phase-split / streaming / 1-device-mesh
-# routes, plus the packed-semiring property tests (an explicit named gate
-# so a backend regression fails CI even if the tier-1 invocation changes)
-python -m pytest tests/test_conformance.py tests/test_packed.py -q
+# routes, plus the packed-semiring property tests and the sparse
+# representation/edge-case tests (an explicit named gate so a backend
+# regression fails CI even if the tier-1 invocation changes)
+python -m pytest tests/test_conformance.py tests/test_packed.py \
+    tests/test_sparse.py -q
 
 # streaming smoke gate: amortized append cost + bit-identity vs cold parse
 python -m benchmarks.run --only streaming_append --smoke
@@ -34,6 +39,12 @@ python -m benchmarks.run --only streaming_append --smoke
 # packed-backend smoke gate: bit-identity vs the jnp backend + the ≥8×
 # SLPF-path bytes-moved reduction at ℓ ≥ 256 states (real gate, not printout)
 python -m benchmarks.run --only packed_throughput --smoke
+
+# speculation smoke gate: sparse feasible-start backend bit-identical to the
+# jnp oracle at ℓ=257 + product-path bytes strictly below dense packed on
+# every RE whose measured feasible width < ℓp/2; refreshes
+# BENCH_speculation.json (the machine-readable perf trajectory)
+python -m benchmarks.run --only speculation_throughput --smoke
 
 # distributed runtime gate on an 8-device host mesh: the mesh tests run
 # in-process (device count is locked at jax init, hence the fresh

@@ -48,6 +48,8 @@ import dataclasses
 import time
 from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
+import numpy as np
+
 from .core.backend import ParserBackend, get_backend, list_backends, register_backend
 from .core.engine import ParserEngine
 from .core.matrices import ParserMatrices, build_matrices
@@ -115,6 +117,10 @@ class ParserConfig:
     # Pallas-kernel reach path where one exists (pallas is always kernels)
     backend: str = "jnp"
     kernel: bool = False
+    # sparse backend only: feasible-prefix depth — how many leading chunk
+    # characters prune the speculative start-state set (PaREM boundary info);
+    # deeper prunes harder at the cost of d sequential mat-vecs per chunk
+    feasible_depth: int = 1
     # chunk-split policy (PaREM's model): 1 = serial, >1 = chunked; the
     # bucket policy rounds chunk lengths to pow2 with this floor
     n_chunks: int = 8
@@ -148,6 +154,16 @@ class ParserConfig:
             raise ValueError(
                 "kernel=True selects a Pallas kernel path; the 'jnp' backend "
                 "has none (use backend='pallas' or backend='packed')"
+            )
+        if self.feasible_depth < 1:
+            raise ValueError(
+                f"feasible_depth must be >= 1, got {self.feasible_depth}"
+            )
+        if self.feasible_depth != 1 and self.backend != "sparse":
+            raise ValueError(
+                "feasible_depth tunes the sparse backend's start-state "
+                f"pruning; backend {self.backend!r} has no speculation to "
+                "prune (use backend='sparse')"
             )
         if self.n_chunks < 1:
             raise ValueError(f"n_chunks must be >= 1, got {self.n_chunks}")
@@ -227,8 +243,10 @@ class ParserConfig:
 
     def build_backend(self) -> ParserBackend:
         """Instantiate the configured phase backend (kernel toggle applied)."""
-        from .core.backend import PackedBackend
+        from .core.backend import PackedBackend, SparseBackend
 
+        if self.backend == "sparse":
+            return SparseBackend(kernel=self.kernel, depth=self.feasible_depth)
         if self.backend == "packed" and self.kernel:
             return PackedBackend(kernel=True)
         return get_backend(self.backend)
@@ -271,6 +289,11 @@ class ParseResult:
     bucket: Optional[Tuple[int, int]] = None
     latency_s: Optional[float] = None
     n_chunks: Optional[int] = None
+    # sparse backend only: the observed speculation width of this parse —
+    # per-chunk feasible-start-set sizes vs the ℓp the paper speculates on
+    # ({"width_mean", "width_max", "n_chunks_real", "product_rows",
+    #   "ell_pad", "depth"}); None on dense backends
+    speculation: Optional[Dict[str, Any]] = None
 
     # ------------------------------------------------------------- queries
 
@@ -506,6 +529,8 @@ class Parser:
         self._parse_service: Optional[ParseService] = None
         self._stream_service: Optional[StreamService] = None
         self._artifacts = None
+        # per-bucket observed speculation widths (sparse backend only)
+        self._spec_buckets: Dict[Tuple[int, int], Dict[str, Any]] = {}
 
     @classmethod
     def from_matrices(
@@ -574,6 +599,46 @@ class Parser:
         slo = self.config.slo
         return slo.default_deadline_s if slo is not None else None
 
+    def _speculation(
+        self, slpf: SLPF, bucket: Optional[Tuple[int, int]]
+    ) -> Optional[Dict[str, Any]]:
+        """Observed speculation width of one parse (sparse backend only).
+
+        Recomputes, host-side, the feasible-start-set size of each chunk the
+        engine's bucket policy produced for this text — the states a chunk
+        processor actually speculates on vs the paper's ℓp.  All-PAD padding
+        chunks carry no speculation and are excluded.
+        """
+        if self.backend_name != "sparse":
+            return None
+        from .core.matrices import feasible_start_widths
+
+        eng = self.engine
+        classes = slpf.classes
+        c, k = bucket if bucket is not None else eng.bucket_shape(
+            len(classes), self.config.n_chunks
+        )
+        chunks = np.asarray(eng._pad_to(classes, c, k)).reshape(c, k)
+        widths = feasible_start_widths(
+            eng.tables.N, chunks, depth=self.config.feasible_depth
+        )
+        real = widths[widths >= 0]
+        spec = {
+            "width_mean": float(real.mean()) if real.size else 0.0,
+            "width_max": int(real.max()) if real.size else 0,
+            "n_chunks_real": int(real.size),
+            "product_rows": int(eng.backend._width),
+            "ell_pad": int(eng.tables.ell_pad),
+            "depth": self.config.feasible_depth,
+        }
+        agg = self._spec_buckets.setdefault(
+            (c, k), {"parses": 0, "width_mean": 0.0, "width_max": 0}
+        )
+        agg["parses"] += 1
+        agg["width_mean"] += (spec["width_mean"] - agg["width_mean"]) / agg["parses"]
+        agg["width_max"] = max(agg["width_max"], spec["width_max"])
+        return spec
+
     def _wrap(
         self,
         slpf: SLPF,
@@ -587,6 +652,7 @@ class Parser:
             bucket=bucket,
             latency_s=latency_s,
             n_chunks=self.config.n_chunks,
+            speculation=self._speculation(slpf, bucket),
         )
 
     @property
@@ -714,7 +780,9 @@ class Parser:
         ``parse``/``stream`` are the raw service stats (present once the
         corresponding service has been touched); ``slo.buckets`` grades every
         observed bucket against the config targets (``p50_ok``/``p99_ok``
-        appear only when targets are set).
+        appear only when targets are set); ``speculation`` (sparse backend
+        only, else None) reports the carried product rows S vs ℓp and the
+        per-bucket observed feasible-start widths (mean/max over parses).
         """
         slo = self.config.slo
         # evaluate each service's stats property ONCE: it rebuilds the full
@@ -722,12 +790,22 @@ class Parser:
         # disagree if the queue moves between them
         ps = self._parse_service.stats if self._parse_service is not None else None
         ss = self._stream_service.stats if self._stream_service is not None else None
+        if self.backend_name == "sparse":
+            speculation: Optional[Dict[str, Any]] = {
+                "product_rows": int(self.engine.backend._width),
+                "ell_pad": int(self.engine.tables.ell_pad),
+                "depth": self.config.feasible_depth,
+                "buckets": {b: dict(v) for b, v in self._spec_buckets.items()},
+            }
+        else:
+            speculation = None
         return {
             "backend": self.backend_name,
             "compile_count": self.compile_count,
             "pending": (ps["pending"] if ps else 0) + (ss["pending"] if ss else 0),
             "parse": ps,
             "stream": ss,
+            "speculation": speculation,
             "slo": {
                 "targets": dataclasses.asdict(slo) if slo is not None else None,
                 "parse_buckets": self._slo_grade(ps["buckets"] if ps else {}),

@@ -24,6 +24,10 @@ Backends:
     lane word); reach / compose / join-combine / build&merge run as OR-AND
     word ops (``core/matrices.py`` packed semiring) — a 32× bandwidth cut on
     the SLPF path for large automata.
+  * ``SparseBackend`` — speculation-width reduction on top of the packed
+    words: products carry only the *feasible-start rows* (the states that
+    survive the chunk's leading character(s), PaREM's boundary set), so the
+    product path pays |feasible| ≤ S rows instead of ℓp.
 
 ``ParserEngine(backend=...)`` selects by name; ``register_backend`` adds new
 ones (GPU, …) without touching the engine.
@@ -43,7 +47,26 @@ A *chunk product* is an opaque, backend-owned device array; callers
     in every position of a join stack;
   * dtype/shape beyond that are backend-private — f32 (ℓp, ℓp) matrices for
     ``jnp``/``pallas``, uint32 (ℓp, W = ℓp/32) packed target-set rows for
-    ``packed``.  Nothing outside the backend may arithmetic on a product.
+    ``packed``, and a *reduced* uint32 (S, 1+W) row-subset layout for
+    ``sparse``.  Nothing outside the backend may arithmetic on a product.
+  * backends whose representation depends on the concrete automaton hook
+    ``bind_tables(tables)``, called once by ``ParserEngine.__init__`` before
+    any phase is traced; the default is a no-op.
+
+The sparse reduced representation: a chunk's product columns can only be
+nonzero at start states that survive the chunk's first character(s) — the
+feasible start-state set F(chunk).  ``sparse`` therefore stores, per chunk,
+an (S, 1+W) uint32 array of gathered rows (slot = [source index | packed
+target words]; see ``core/matrices.py``), where S is a static power-of-two
+bucket of the automaton's worst-case single-character feasible width
+max_a nnz-cols(N[a]) — a bound every depth-d set respects, so compiled
+shapes stay fixed while the payload tracks the automaton, not ℓp.  The
+monoid identity (which is not row-sparse) is carried as a flagged sentinel
+product; all-PAD padding chunks produce exactly it, keeping identity slots
+semantic no-ops in join stacks.  *Dense-fallback rule*: when the pow2
+bucket reaches ℓp (an automaton whose first characters admit ~all states),
+S = ℓp — the representation degenerates to dense packed rows plus an index
+column and every op stays correct, just without the reduction.
 
 The non-product boundaries are fixed across backends: ``join`` consumes a
 (c, …) product stack and returns f32 (c, ℓp) entry vectors {0,1};
@@ -58,10 +81,13 @@ from __future__ import annotations
 
 from typing import Callable, Dict, Tuple, Type, Union
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 
 from .matrices import (
+    SPARSE_EMPTY,
     pack_bits_jnp,
     pack_transition_table_jnp,
     packed_identity,
@@ -70,8 +96,17 @@ from .matrices import (
     packed_matvec_T_words,
     packed_matvec_words,
     packed_semiring_matmul,
+    sparse_compose,
+    sparse_identity,
+    sparse_init_rows,
+    sparse_matvec,
+    sparse_matvec_T,
 )
 from .scan import exclusive_entries
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, (int(n) - 1).bit_length())
 
 
 # ----------------------------------------------------------- semiring ops
@@ -186,6 +221,15 @@ class ParserBackend:
 
     name: str = "abstract"
     min_lane_pad: int = 32   # segment-dim alignment this backend requires
+
+    def bind_tables(self, tables) -> None:
+        """One-time hook: the concrete ``EngineTables`` this backend will run.
+
+        Called by ``ParserEngine.__init__`` before any phase program is
+        traced.  Backends whose product representation depends on the
+        automaton (the sparse width bucket S) derive their static shapes
+        here; the default is a no-op — most backends are table-agnostic.
+        """
 
     def reach(self, N: jnp.ndarray, chunks: jnp.ndarray) -> jnp.ndarray:
         """(c, k) chunks → stacked chunk products (axis 0 = chunk)."""
@@ -440,6 +484,167 @@ class PackedBackend(ParserBackend):
         return jax.vmap(core, in_axes=(None, None, None, 0))
 
 
+class SparseBackend(PackedBackend):
+    """Feasible-start sparse products — the speculation-width reduction.
+
+    The paper pays ℓp speculative start states per chunk; PaREM's observation
+    is that boundary information prunes that to the *feasible start-state
+    set*: only states with an outgoing transition on the chunk's first
+    character(s) can have a nonzero product column.  This backend computes
+    that set per chunk inside the jitted reach body (a depth-``d`` backward
+    Boolean mat-vec over the chunk's leading classes), gathers the surviving
+    rows, and folds ONLY those through the packed OR-AND word ops — S·ℓp·W
+    word ops and S·(1+W)·4 product bytes per chunk vs the dense packed
+    ℓp²·W ops and ℓp·W·4 bytes.
+
+    Products are uint32 (S, 1+W) gathered-row arrays (module contract /
+    ``core/matrices.py``): slot = [source index | packed target words],
+    ``SPARSE_EMPTY`` index = unused slot, identity carried as the
+    ``SPARSE_IDENT`` flag (all-PAD padding chunks emit exactly it).  S is
+    static per automaton — ``bind_tables`` buckets the worst-case
+    single-character feasible width max_a nnz-cols(N[a]) to the next pow2
+    (floor ``min_width``), with the dense-fallback rule S = ℓp when the
+    bucket reaches ℓp.  Every depth-d feasible set is a subset of the
+    depth-1 set of the chunk's first class, so S slots always suffice and
+    compiled shapes never depend on the text.
+
+    The reduced representation flows end-to-end: the join scan composes
+    (S, 1+W) summaries, ``StreamingParser``'s sealed cache stores them
+    (``size·itemsize`` accounting sees the cut), and ``DistributedEngine``'s
+    all-gather moves them across the mesh.  Entries, start column, and
+    build&merge keep the contract's fixed f32/u32 seams (build&merge is
+    entry-driven and inherits the packed word path unchanged).
+
+    ``kernel=True`` routes the gathered-row fold through the Pallas kernel
+    (``kernels/sparse_reach.py``; interpret mode off-TPU).  ``depth`` is the
+    feasible-prefix depth: characters of the chunk consulted when pruning
+    (``ParserConfig.feasible_depth``); deeper prunes harder at the cost of
+    d sequential mat-vecs before the fold.
+    """
+
+    name = "sparse"
+    min_lane_pad = 32
+
+    def __init__(
+        self,
+        kernel: bool = False,
+        interpret: Union[bool, None] = None,
+        depth: int = 1,
+        min_width: int = 8,
+    ):
+        super().__init__(kernel=kernel, interpret=interpret)
+        if depth < 1:
+            raise ValueError(f"feasible-prefix depth must be ≥ 1, got {depth}")
+        self.depth = int(depth)
+        self.min_width = int(min_width)
+        self._width: Union[int, None] = None      # S: static product rows
+        self._ell_pad: Union[int, None] = None
+        self.class_widths: Union[np.ndarray, None] = None
+
+    # -------------------------------------------------- static width bucket
+
+    def bind_tables(self, tables) -> None:
+        N = np.asarray(tables.N) > 0
+        lp = int(N.shape[-1])
+        # per real class (PAD excluded): nnz columns of N[a] = states with an
+        # outgoing transition on a = the depth-1 feasible width upper bound
+        widths = N[:-1].any(axis=1).sum(axis=1).astype(np.int64)
+        w_static = int(widths.max()) if widths.size else 1
+        S = _next_pow2(max(self.min_width, w_static, 1))
+        # dense-fallback rule: no reduction to be had → carry every row
+        self._width = lp if S >= lp else S
+        self._ell_pad = lp
+        self.class_widths = widths
+
+    def _require_bound(self, lp: int) -> int:
+        if self._width is None:
+            raise RuntimeError(
+                "sparse backend is unbound — ParserEngine.__init__ calls "
+                "bind_tables(tables) before tracing; standalone use must too"
+            )
+        if lp != self._ell_pad:
+            raise ValueError(
+                f"sparse backend bound to ℓp={self._ell_pad}, got ℓp={lp}; "
+                "one SparseBackend instance serves one automaton"
+            )
+        return self._width
+
+    # ------------------------------------------------------------ phase ops
+
+    def reach(self, N, chunks):
+        lp = N.shape[-1]
+        S = self._require_bound(lp)
+        Np = pack_transition_table_jnp(N)            # (A+1, ℓp, W)
+        pad_cls = N.shape[0] - 1
+        depth = min(self.depth, chunks.shape[-1])
+        ident = sparse_identity(S, lp // 32)
+        if self.kernel:
+            from ..kernels.ops import use_interpret
+            from ..kernels.sparse_reach import sparse_reach_rows
+
+            interp = use_interpret() if self.interpret is None else self.interpret
+
+        def feasible_idx(chunk):
+            u = jnp.ones((lp,), N.dtype)
+            for j in range(depth - 1, -1, -1):
+                u = jnp.minimum(N[chunk[j]].T @ u, 1.0)
+            return jnp.sort(
+                jnp.where(
+                    u > 0.5,
+                    jnp.arange(lp, dtype=jnp.int32),
+                    jnp.int32(SPARSE_EMPTY),
+                )
+            )[:S]
+
+        def one(chunk):
+            idx = feasible_idx(chunk)
+            R0 = sparse_init_rows(idx, lp)           # (S, W) packed e_idx rows
+            if self.kernel:
+                R = sparse_reach_rows(Np, chunk, R0, interpret=interp)
+            else:
+                def step(R, cls):
+                    return (
+                        jax.vmap(lambda vp: packed_matvec_words(Np[cls], vp))(R),
+                        None,
+                    )
+
+                R, _ = jax.lax.scan(step, R0, chunk)
+            body = jnp.concatenate([idx.astype(jnp.uint32)[:, None], R], axis=1)
+            # all-PAD padding chunk ⇔ first class is PAD (PAD only pads the
+            # tail) ⇒ product is exactly the identity → flagged encoding
+            return jnp.where(chunk[0] == pad_cls, ident, body)
+
+        if self.kernel:
+            # sequential over chunks: the kernel owns the intra-chunk grid
+            return jax.lax.map(one, chunks)
+        return jax.vmap(one)(chunks)
+
+    def compose(self, later, earlier):
+        return sparse_compose(later, earlier)
+
+    def identity_product(self, ell_pad, dtype=jnp.float32):
+        S = self._require_bound(ell_pad)
+        return sparse_identity(S, ell_pad // 32)
+
+    def join(self, P, I, F):
+        Jf = exclusive_entries(
+            combine=sparse_compose,
+            act=sparse_matvec,
+            summaries=P,
+            init=I,
+        )
+        Jb_rev = exclusive_entries(
+            combine=lambda later, earlier: sparse_compose(earlier, later),
+            act=sparse_matvec_T,                     # transpose free on rows
+            summaries=P[::-1],
+            init=F,
+        )
+        return Jf, Jb_rev[::-1]
+
+    def start_column(self, P, I, Jb0):
+        return I * sparse_matvec_T(P[0], Jb0)
+
+
 _BACKENDS: Dict[str, Type[ParserBackend]] = {}
 
 
@@ -451,6 +656,7 @@ def register_backend(cls: Type[ParserBackend]) -> Type[ParserBackend]:
 register_backend(JnpBackend)
 register_backend(PallasBackend)
 register_backend(PackedBackend)
+register_backend(SparseBackend)
 
 
 def list_backends() -> list:

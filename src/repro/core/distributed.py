@@ -15,8 +15,11 @@ All cross-device structure flows through ONE array: the stacked chunk
 products ``P`` — axis 0 indexes chunks; the per-chunk payload is the
 backend's opaque product representation ((ℓp, ℓp) f32 for jnp/pallas,
 (ℓp, W = ℓp/32) uint32 words for packed, which cuts the collective's bytes
-32×).  The contract, shared by all three routes and by the streaming
-prefix cache:
+32×, and (S, 1+W) gathered feasible-start rows for sparse, which further
+shrinks it to the automaton's speculation width S ≤ ℓp — the payload
+reduction composes with the placement for free because the collective only
+ever sees "axis 0 = chunks").  The contract, shared by all three routes and
+by the streaming prefix cache:
 
   1. reach runs shard-local — each device folds only its own chunk rows into
      products (no communication);

@@ -253,6 +253,9 @@ class ParserEngine:
         self.backend = get_backend(backend)
         lane_pad = max(lane_pad, self.backend.min_lane_pad)
         self.tables = EngineTables.from_matrices(matrices, lane_pad=lane_pad)
+        # table-dependent backends (sparse width bucket) fix their static
+        # product shapes here, before any phase program is traced
+        self.backend.bind_tables(self.tables)
         self.min_chunk_len = max(1, min_chunk_len)
         self.mesh = mesh
         self.mesh_rules = mesh_rules

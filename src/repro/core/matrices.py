@@ -244,3 +244,148 @@ def packed_matvec_T_words(Q: jnp.ndarray, vp: jnp.ndarray) -> jnp.ndarray:
     """``Mᵀ v`` staying packed: words vp (W,) → words (W,)."""
     hits = _or_reduce(Q & vp[None, :], axis=1) != 0      # (ℓp,) bool
     return pack_bits_jnp(hits)
+
+
+# --------------------------------------------- sparse feasible-start products
+#
+# The speculation-width-reduced product representation of the "sparse"
+# ParserBackend (core/backend.py).  A chunk product only has nonzero packed
+# rows at the *feasible start states* — the states surviving the chunk's
+# leading character(s) (PaREM §III) — so it is carried as an (S, 1+W) uint32
+# array of gathered rows instead of the dense (ℓp, W) packed matrix:
+#
+#   P[j, 0]  = source-state index of listed row j, or SPARSE_EMPTY for an
+#              unused slot (a zero row);
+#   P[j, 1:] = that row's packed target-set words (the packed-semiring layout
+#              above — bit b of word w ⇔ target 32·w + b reachable).
+#
+# S is a static power-of-two bucket ≥ the automaton's max per-class feasible
+# width (chosen host-side at engine build; dense fallback S = ℓp when the
+# bound does not shrink).  The monoid identity cannot list its ℓp nonzero
+# rows inside S slots, so it is encoded by a flag: P[0, 0] == SPARSE_IDENT
+# marks the whole product as the identity (every other slot ignored).  All
+# ops below honour the flag with `where`, so identity pad slots in join
+# stacks stay semantic no-ops exactly as in the dense representations.
+
+SPARSE_EMPTY = np.uint32(0x7FFFFFFF)   # unused slot (zero row)
+SPARSE_IDENT = np.uint32(0x7FFFFFFE)   # in slot [0, 0]: product = identity
+
+
+def sparse_identity(rows: int, W: int) -> jnp.ndarray:
+    """The identity product in the sparse layout: flag set, no listed rows."""
+    P = jnp.full((rows, 1 + W), SPARSE_EMPTY, dtype=jnp.uint32)
+    P = P.at[:, 1:].set(jnp.uint32(0))
+    return P.at[0, 0].set(SPARSE_IDENT)
+
+
+def sparse_is_identity(P: jnp.ndarray) -> jnp.ndarray:
+    """Scalar (or batched) bool: is this sparse product the flagged identity?"""
+    return P[..., 0, 0] == SPARSE_IDENT
+
+
+def sparse_init_rows(idx: jnp.ndarray, ell_pad: int) -> jnp.ndarray:
+    """Packed identity rows e_idx: (S,) indices → (S, W) words.
+
+    Row j holds the single bit ``idx[j]``; sentinel indices (≥ ℓp) give zero
+    rows — the reach fold's start state (partial product after 0 characters).
+    """
+    W = ell_pad // _WORD
+    S = idx.shape[0]
+    w = jax.lax.broadcasted_iota(jnp.uint32, (S, W), 1)
+    i = idx.astype(jnp.uint32)[:, None]
+    return jnp.where(
+        (i < ell_pad) & (i // _WORD == w),
+        jnp.uint32(1) << (i % _WORD),
+        jnp.uint32(0),
+    )
+
+
+def sparse_to_packed(P: jnp.ndarray, ell_pad: int) -> jnp.ndarray:
+    """Sparse (S, 1+W) → dense packed (ℓp, W): scatter listed rows, zeros
+    elsewhere; the flagged identity densifies to ``packed_identity``."""
+    idx = P[:, 0].astype(jnp.int32)
+    W = P.shape[-1] - 1
+    dense = (
+        jnp.zeros((ell_pad, W), jnp.uint32).at[idx].set(P[:, 1:], mode="drop")
+    )
+    return jnp.where(sparse_is_identity(P), packed_identity(ell_pad), dense)
+
+
+def _sparse_compose_one(later: jnp.ndarray, earlier: jnp.ndarray) -> jnp.ndarray:
+    """``later ⊗ earlier`` of two (S, 1+W) sparse products.
+
+    The composition's feasible rows are (a subset of) ``earlier``'s listed
+    rows — a start state dead by ``earlier``'s leading characters stays dead —
+    so the output keeps ``earlier``'s index column and rewrites each listed
+    row through ``later``: out[s] = OR of ``later``'s rows selected by the
+    target bits of ``earlier[s]`` (S·ℓp·W word ops vs the dense ℓp²·W).
+    Identity flags short-circuit either side.
+    """
+    W = later.shape[-1] - 1
+    ell_pad = W * _WORD
+    D = sparse_to_packed(later, ell_pad)                     # (ℓp, W)
+    out_words = jax.vmap(lambda vp: packed_matvec_words(D, vp))(earlier[:, 1:])
+    composed = jnp.concatenate([earlier[:, :1], out_words], axis=1)
+    out = jnp.where(sparse_is_identity(later), earlier, composed)
+    return jnp.where(sparse_is_identity(earlier), later, out)
+
+
+def sparse_compose(later: jnp.ndarray, earlier: jnp.ndarray) -> jnp.ndarray:
+    """Batched-leading-dims ``later ⊗ earlier`` (``associative_scan`` calls
+    its combine on stacked blocks, so leading dims must broadcast)."""
+    return jnp.vectorize(
+        _sparse_compose_one, signature="(s,v),(s,v)->(s,v)"
+    )(later, earlier)
+
+
+def sparse_matvec(P: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """``M v`` with sparse M: {0,1} f32 v (ℓp,) → {0,1} f32 (ℓp,).
+
+    Gathers v at the listed source indices, ORs the selected rows' words —
+    S word-selects instead of ℓp.
+    """
+    W = P.shape[-1] - 1
+    ell_pad = W * _WORD
+    idx = P[:, 0].astype(jnp.int32)
+    vi = jnp.where(idx < ell_pad, v[jnp.clip(idx, 0, ell_pad - 1)], 0.0)
+    mask = jnp.uint32(0) - (vi > 0.5).astype(jnp.uint32)
+    words = _or_reduce(mask[:, None] & P[:, 1:], axis=0)     # (W,)
+    return jnp.where(sparse_is_identity(P), v, unpack_bits_jnp(words, ell_pad))
+
+
+def sparse_matvec_T(P: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """``Mᵀ v`` with sparse M: out is nonzero only at listed source states
+    whose target set intersects v — one AND + OR-reduce per listed row."""
+    W = P.shape[-1] - 1
+    ell_pad = W * _WORD
+    vp = pack_bits_jnp(v)
+    hits = (_or_reduce(P[:, 1:] & vp[None, :], axis=1) != 0).astype(jnp.float32)
+    idx = P[:, 0].astype(jnp.int32)
+    out = jnp.zeros(ell_pad, jnp.float32).at[idx].set(hits, mode="drop")
+    return jnp.where(sparse_is_identity(P), v, out)
+
+
+def feasible_start_widths(
+    N: np.ndarray, chunks: np.ndarray, depth: int = 1
+) -> np.ndarray:
+    """Host-side observed speculation widths: per-chunk feasible-set sizes.
+
+    For each (k,) chunk row of ``chunks``, the number of start states whose
+    column of ``N[y_d] ⊗ … ⊗ N[y_1]`` is nonzero — the states a chunk
+    processor actually needs to speculate on, vs the paper's ℓp.  Chunks
+    starting with the PAD class (all-PAD padding) report -1: their product is
+    the identity and they carry no speculation.  Pure numpy (stats path).
+    """
+    N = np.asarray(N) > 0
+    chunks = np.asarray(chunks).reshape(-1, np.asarray(chunks).shape[-1])
+    pad = N.shape[0] - 1
+    out = np.empty(chunks.shape[0], dtype=np.int64)
+    for i, chunk in enumerate(chunks):
+        if chunk[0] == pad:
+            out[i] = -1
+            continue
+        u = np.ones(N.shape[-1], dtype=bool)
+        for j in range(min(depth, len(chunk)) - 1, -1, -1):
+            u = (N[chunk[j]] & u[:, None]).any(axis=0)
+        out[i] = int(u.sum())
+    return out

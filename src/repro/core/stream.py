@@ -15,6 +15,13 @@ state between calls, built on the engine's separately-jitted phase programs
 
   sealed chunks   immutable prefix chunks with their cached products P_i —
                   the persistent prefix cache; never recomputed by append.
+                  Products are the backend's opaque representation (the
+                  ``core/backend.py`` contract), so cache residency follows
+                  the backend: packed words cut the bytes 32× vs f32, and
+                  the sparse backend's (S, 1+W) feasible-start rows shrink
+                  each entry to the automaton's speculation width — the
+                  ``cache_nbytes`` accounting and eviction budgets see the
+                  reduction automatically (``size · itemsize``).
   mutable tail    the unsealed suffix; its running product is *extended*
                   (one ``compose`` per appended piece), never re-folded.
   join cache      forward/backward entries over [sealed…, tail] from

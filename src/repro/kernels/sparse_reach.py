@@ -1,0 +1,100 @@
+"""Sparse reach kernel: gathered feasible-start rows, packed OR-AND fold.
+
+The speculation-width-reduced twin of ``kernels/packed_reach.py``: instead of
+folding all ℓp packed product rows through the chunk, it folds only the S
+gathered feasible-start rows (``core/backend.py``'s sparse contract — the
+rows whose start states survive the chunk's leading characters).  The caller
+computes the feasible index set and materialises the start rows
+``R0 = packed e_idx`` (S, W); the kernel owns the per-character fold
+
+    R'[j] = OR_k bit_k(R[j]) · N_packed[x_t][k]
+
+— identical word arithmetic to the packed kernel but over an (S, W) running
+block, so each step's VPU work and VMEM residency shrink by ℓp/S.
+
+TPU-native structure mirrors the packed kernel: the chunk's char-class ids
+are a *scalar-prefetch* operand, the BlockSpec index map selects
+``N_packed[x_t]`` per step (next class's rows DMA while the current step
+computes), and the running (S, W) row block lives in a VMEM scratch across
+grid steps, seeded from the R0 input at step 0.  HBM↔VMEM traffic per step
+is unchanged (the ℓp·W transition rows still stream in); the *product* side
+— scratch, output, and everything downstream (join stacks, streaming cache,
+mesh all-gather) — pays S rows instead of ℓp.
+
+Verified in interpret mode on CPU (bit-identical to the jnp gathered fold);
+the (S, W) minor-dim retiling for real-TPU lane layouts rides the ROADMAP's
+TPU benchmarking item with the other kernels.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_WORD = 32
+
+
+def _sparse_reach_kernel(ids_ref, r0_ref, np_ref, out_ref, acc_ref, *, k: int):
+    t = pl.program_id(0)
+    S, W = acc_ref.shape
+
+    @pl.when(t == 0)
+    def _init():
+        acc_ref[...] = r0_ref[...]          # packed e_idx feasible-start rows
+
+    block = np_ref[0]                       # (ℓp, W) packed rows of N[x_t]
+    acc = acc_ref[...]                      # (S, W) running gathered rows
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (1, _WORD), 1)
+
+    def word_block(wk, new):
+        # bits k = 32·wk … 32·wk+31 of every gathered row's target set
+        words = jax.lax.dynamic_slice_in_dim(acc, wk, 1, 1)          # (S, 1)
+        bits = (words >> shifts) & jnp.uint32(1)                     # (S, 32)
+        mask = jnp.uint32(0) - bits
+        rows = jax.lax.dynamic_slice_in_dim(block, wk * _WORD, _WORD, 0)
+        sel = mask[:, :, None] & rows[None, :, :]                    # (S, 32, W)
+        return new | jax.lax.reduce(
+            sel, jnp.uint32(0), jax.lax.bitwise_or, (1,)
+        )
+
+    acc_ref[...] = jax.lax.fori_loop(0, W, word_block, jnp.zeros_like(acc))
+
+    @pl.when(t == k - 1)
+    def _done():
+        out_ref[...] = acc_ref[...]
+
+
+def sparse_reach_rows(
+    Np: jnp.ndarray,         # (A+1, ℓp, W) uint32 packed transition rows
+    ids: jnp.ndarray,        # (k,) int32 char classes of the chunk
+    R0: jnp.ndarray,         # (S, W) uint32 packed feasible-start rows e_idx
+    *,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Gathered-row chunk fold (S, W) uint32.  ℓp must equal 32·W."""
+    _, ell, W = Np.shape
+    assert ell == W * _WORD, (Np.shape, "ℓp must be a multiple of 32")
+    S = R0.shape[0]
+    k = ids.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(k,),
+        in_specs=[
+            # the start rows, resident every step (read once at t == 0)
+            pl.BlockSpec((S, W), lambda t, ids: (0, 0)),
+            # one (1, ℓp, W) block of packed rows per step, chosen by the ids
+            pl.BlockSpec((1, ell, W), lambda t, ids: (ids[t], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((S, W), lambda t, ids: (0, 0)),
+        scratch_shapes=[pltpu.VMEM((S, W), jnp.uint32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_sparse_reach_kernel, k=k),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((S, W), jnp.uint32),
+        interpret=interpret,
+    )(ids, R0, Np)

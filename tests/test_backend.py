@@ -7,6 +7,7 @@ from repro.core.backend import (
     JnpBackend,
     PackedBackend,
     PallasBackend,
+    SparseBackend,
     get_backend,
     join_entries,
 )
@@ -14,7 +15,7 @@ from repro.core.engine import ParserEngine, _entries_from_products
 from repro.core.reference import ParallelArtifacts, parse_parallel_reference
 from repro.core.serial import parse_serial_matrix
 
-BACKENDS = ["jnp", "pallas", "packed"]
+BACKENDS = ["jnp", "pallas", "packed", "sparse"]
 
 TEXTS = ["", "b", "ba", "abab", "ababab", "a" * 23, "ab" * 40]
 
@@ -33,6 +34,7 @@ def test_get_backend_resolution():
     assert isinstance(get_backend("jnp"), JnpBackend)
     assert isinstance(get_backend("pallas"), PallasBackend)
     assert isinstance(get_backend("packed"), PackedBackend)
+    assert isinstance(get_backend("sparse"), SparseBackend)
     b = PallasBackend(interpret=True)
     assert get_backend(b) is b
     with pytest.raises(ValueError, match="unknown parse backend"):

@@ -1,0 +1,270 @@
+"""Sparse feasible-start backend: representation ops + edge-case coverage.
+
+The cross-route bit-identity of the "sparse" backend is enforced by the
+conformance harness (tests/test_conformance.py enumerates the registry).
+This file covers what the harness cannot see from outside the opaque
+product contract:
+
+  * the (S, 1+W) sparse representation ops against dense Boolean oracles
+    (compose / matvec / matvec_T / identity flag semantics);
+  * the feasible-start computation's edge cases from the ISSUE checklist —
+    empty texts (all-PAD chunks → flagged identity products), the
+    dense-fallback rule (bucket reaches ℓp), single-state feasible sets,
+    seal-boundary chunks in streaming, and ℓp not a multiple of the carried
+    row bucket S;
+  * the observability satellites: ``ParseResult.speculation`` and
+    ``Parser.stats()["speculation"]``.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.api import Parser, ParserConfig
+from repro.core.backend import SparseBackend
+from repro.core.engine import ParserEngine
+from repro.core.matrices import (
+    SPARSE_EMPTY,
+    SPARSE_IDENT,
+    boolean_matmul,
+    boolean_matvec,
+    feasible_start_widths,
+    pack_transition_table,
+    sparse_compose,
+    sparse_identity,
+    sparse_init_rows,
+    sparse_is_identity,
+    sparse_matvec,
+    sparse_matvec_T,
+    sparse_to_packed,
+)
+from repro.core.reference import ParallelArtifacts
+from repro.core.segments import compute_segments
+from repro.core.stream import StreamingParser
+
+LP = 64
+W = LP // 32
+
+
+def _sparsify(M: np.ndarray, S: int) -> jnp.ndarray:
+    """Dense {0,1} (ℓp, ℓp) → the sparse (S, 1+W) rep listing its nonzero
+    columns (the test-side constructor; the backend builds these in reach)."""
+    cols = np.where(M.any(axis=0))[0]
+    assert len(cols) <= S, "test matrix too dense for the chosen S"
+    packed = pack_transition_table(M[None])[0]          # (ℓp, W): row=col set
+    P = np.full((S, 1 + W), int(SPARSE_EMPTY), dtype=np.uint32)
+    P[:, 1:] = 0
+    P[: len(cols), 0] = cols
+    P[: len(cols), 1:] = packed[cols]
+    return jnp.asarray(P)
+
+
+def _random_sparse_dense(rng, n_cols):
+    """A random Boolean matrix with exactly ``n_cols`` nonzero columns."""
+    M = np.zeros((LP, LP), dtype=bool)
+    cols = rng.choice(LP, size=n_cols, replace=False)
+    for c in cols:
+        M[rng.choice(LP, size=rng.integers(1, 5), replace=False), c] = True
+    return M
+
+
+# ------------------------------------------------------- representation ops
+
+
+def test_sparse_ops_match_dense_oracle():
+    rng = np.random.default_rng(7)
+    for _ in range(10):
+        A = _random_sparse_dense(rng, 6)
+        B = _random_sparse_dense(rng, 5)
+        Pa, Pb = _sparsify(A, 8), _sparsify(B, 8)
+        v = rng.integers(0, 2, LP).astype(np.float32)
+
+        # compose(later=A, earlier=B) ≡ A ⊗ B, carried on B's columns
+        C = sparse_compose(Pa, Pb)
+        assert np.array_equal(
+            np.asarray(sparse_to_packed(C, LP)),
+            pack_transition_table((boolean_matmul(A, B))[None])[0],
+        )
+        # matvec / matvec_T against the Boolean oracle
+        assert np.array_equal(
+            np.asarray(sparse_matvec(Pa, jnp.asarray(v))) > 0.5,
+            boolean_matvec(A, v > 0.5),
+        )
+        assert np.array_equal(
+            np.asarray(sparse_matvec_T(Pa, jnp.asarray(v))) > 0.5,
+            boolean_matvec(A.T, v > 0.5),
+        )
+
+
+def test_sparse_identity_semantics():
+    rng = np.random.default_rng(3)
+    A = _random_sparse_dense(rng, 4)
+    Pa = _sparsify(A, 8)
+    I = sparse_identity(8, W)
+    v = jnp.asarray(rng.integers(0, 2, LP).astype(np.float32))
+
+    assert bool(sparse_is_identity(I)) and not bool(sparse_is_identity(Pa))
+    assert int(I[0, 0]) == int(SPARSE_IDENT)
+    # identity is a two-sided compose no-op and a matvec no-op
+    for composed in (sparse_compose(Pa, I), sparse_compose(I, Pa)):
+        assert np.array_equal(
+            np.asarray(sparse_to_packed(composed, LP)),
+            np.asarray(sparse_to_packed(Pa, LP)),
+        )
+    assert np.array_equal(np.asarray(sparse_matvec(I, v)), np.asarray(v))
+    assert np.array_equal(np.asarray(sparse_matvec_T(I, v)), np.asarray(v))
+    # and it densifies to the packed identity
+    assert np.array_equal(
+        np.asarray(sparse_to_packed(I, LP)),
+        pack_transition_table(np.eye(LP, dtype=bool)[None])[0],
+    )
+
+
+def test_sparse_init_rows_sentinels():
+    idx = jnp.asarray([3, 40, int(SPARSE_EMPTY)], dtype=jnp.int32)
+    R = np.asarray(sparse_init_rows(idx, LP))
+    assert R.shape == (3, W)
+    assert R[0, 0] == 1 << 3 and R[0, 1] == 0
+    assert R[1, 1] == 1 << 8 and R[1, 0] == 0
+    assert not R[2].any()                     # sentinel slot → zero row
+
+
+# --------------------------------------------------------- edge-case parses
+
+
+def _engines(pattern, **sparse_kw):
+    art = ParallelArtifacts.generate(pattern)
+    e_ref = ParserEngine(art.matrices, backend="jnp")
+    e_sp = ParserEngine(art.matrices, backend=SparseBackend(**sparse_kw))
+    return e_ref, e_sp
+
+
+def _assert_identical(e_ref, e_sp, texts, n_chunks=4):
+    for text in texts:
+        ref = e_ref.parse(text, n_chunks=n_chunks)
+        got = e_sp.parse(text, n_chunks=n_chunks)
+        assert np.array_equal(got.pack(), ref.pack()), text
+        assert got.accepted == ref.accepted, text
+
+
+def test_empty_text_all_pad_chunks():
+    """Empty input: every chunk is all-PAD → every product is the flagged
+    identity, and the parse matches the oracle."""
+    e_ref, e_sp = _engines("(ab|a)*")
+    _assert_identical(e_ref, e_sp, [b""])
+    t = e_sp.tables
+    chunks = jnp.asarray(e_sp._pad_to(np.zeros(0, np.int32), 4, 8))
+    P = e_sp.phases.reach(t.N, chunks)
+    assert P.shape[0] == 4 and bool(sparse_is_identity(P).all())
+
+
+def test_dense_fallback_carries_all_rows():
+    """Dense-fallback rule: when the pow2 width bucket reaches ℓp the backend
+    carries S = ℓp rows — still bit-identical, no reduction."""
+    e_ref, e_sp = _engines("(ab|a)*", min_width=4096)
+    assert e_sp.backend._width == e_sp.tables.ell_pad
+    _assert_identical(
+        e_ref, e_sp, [b"", b"a", b"abaab", b"abab" * 9, b"ab~a"]
+    )
+
+
+def test_single_state_feasible_sets():
+    """A cyclic distinct-letter RE: mid-cycle classes admit exactly one
+    start state — the deepest reduction the representation must carry."""
+    e_ref, e_sp = _engines("(abc)*")
+    text = b"abcabcabc"
+    classes = e_sp.classes_of_text(text)
+    c, k = e_sp.bucket_shape(len(classes), 4)
+    widths = feasible_start_widths(
+        e_sp.tables.N, np.asarray(e_sp._pad_to(classes, c, k)).reshape(c, k)
+    )
+    assert (widths == 1).any(), widths        # 'b'/'c'-led chunks: one state
+    _assert_identical(e_ref, e_sp, [text, b"abc", b"b", b"bcabc"])
+
+
+def test_streaming_seal_boundary_chunks():
+    """Appends that land exactly on, one short of, and one past every seal
+    boundary keep the sparse sealed cache bit-identical to a cold parse."""
+    e_ref, e_sp = _engines("(a|b|ab)+")
+    text = b"abbaababba" * 4
+    for cut in (3, 4, 5, 8, 9, 16):
+        sp = StreamingParser(e_sp, first_seal_len=4)
+        sp.append(e_sp.classes_of_text(text[:cut]))
+        sp.append(e_sp.classes_of_text(text[cut:]))
+        ref = e_ref.parse(text, n_chunks=4)
+        assert np.array_equal(sp.current_slpf().pack(), ref.pack()), cut
+        assert sp.n_sealed_chunks > 0
+
+
+def test_ell_pad_not_multiple_of_row_bucket():
+    """e(31): ℓ = 69 → ℓp = 96 with S = 64 — 96 % 64 ≠ 0, so gathered rows
+    straddle the pow2 bucket; products must still compose exactly."""
+    table = compute_segments("(a|b)*a(a|b){31}")
+    e_ref = ParserEngine(table, backend="jnp")
+    e_sp = ParserEngine(table, backend="sparse")
+    lp, S = e_sp.tables.ell_pad, e_sp.backend._width
+    assert S < lp and lp % S != 0, (lp, S)
+    rng = np.random.default_rng(5)
+    texts = [bytes(rng.choice([97, 98], size=n)) for n in (1, 33, 70)]
+    _assert_identical(e_ref, e_sp, texts)
+
+
+def test_kernel_path_bit_identical():
+    e_ref, e_sp = _engines("(a|b|ab)+", kernel=True, interpret=True)
+    _assert_identical(e_ref, e_sp, [b"", b"a", b"abba" * 6])
+
+
+def test_feasible_depth_two_prunes_harder():
+    e_ref, e_sp = _engines("(a|b)*a(a|b){5}", depth=2)
+    text = b"abab" * 4
+    classes = e_sp.classes_of_text(text)
+    c, k = e_sp.bucket_shape(len(classes), 4)
+    chunks = np.asarray(e_sp._pad_to(classes, c, k)).reshape(c, k)
+    w1 = feasible_start_widths(e_sp.tables.N, chunks, depth=1)
+    w2 = feasible_start_widths(e_sp.tables.N, chunks, depth=2)
+    assert (w2[w2 >= 0] <= w1[w1 >= 0]).all()
+    _assert_identical(e_ref, e_sp, [text, b"a", b"abaabb"])
+
+
+# ------------------------------------------------------- binding + metadata
+
+
+def test_unbound_backend_raises():
+    b = SparseBackend()
+    with pytest.raises(RuntimeError, match="unbound"):
+        b.reach(jnp.zeros((2, 32, 32)), jnp.zeros((1, 8), jnp.int32))
+    with pytest.raises(RuntimeError, match="unbound"):
+        b.identity_product(32)
+
+
+def test_bound_backend_rejects_other_automaton():
+    _, e_sp = _engines("(ab|a)*")
+    with pytest.raises(ValueError, match="bound to"):
+        e_sp.backend.identity_product(e_sp.tables.ell_pad * 2)
+
+
+def test_speculation_metadata_and_stats():
+    p = Parser(ParserConfig(regex="(abc)*", backend="sparse"))
+    r = p.parse(b"abcabc")
+    spec = r.speculation
+    assert spec is not None
+    assert spec["width_max"] <= spec["product_rows"] <= spec["ell_pad"]
+    assert spec["n_chunks_real"] >= 1 and spec["depth"] == 1
+    st = p.stats()["speculation"]
+    assert st["product_rows"] == spec["product_rows"]
+    (agg,) = st["buckets"].values()
+    assert agg["parses"] == 1 and agg["width_max"] == spec["width_max"]
+    # dense backends carry no speculation metadata
+    pd = Parser(ParserConfig(regex="(abc)*", backend="packed"))
+    assert pd.parse(b"abc").speculation is None
+    assert pd.stats()["speculation"] is None
+
+
+def test_config_validates_feasible_depth():
+    with pytest.raises(ValueError, match="feasible_depth"):
+        ParserConfig(regex="a", feasible_depth=0)
+    with pytest.raises(ValueError, match="sparse"):
+        ParserConfig(regex="a", backend="packed", feasible_depth=2)
+    cfg = ParserConfig(regex="a", backend="sparse", feasible_depth=3)
+    assert ParserConfig.from_dict(cfg.to_dict()) == cfg
