@@ -433,9 +433,10 @@ def bench_speculation_throughput(rows, quick, smoke=False):
 
     Also reports measured speculation width (mean/max vs ℓp) and parse
     wall-clock per backend (CPU numbers gauge overhead only; the bytes rows
-    are the TPU-relevant signal), and writes the whole measurement set as
-    machine-readable ``BENCH_speculation.json`` at the repo root — the first
-    entry of the perf trajectory ROADMAP asks for.
+    are the TPU-relevant signal).  Returns the structured measurement set;
+    ``main()`` writes it under ``metrics["report"]`` of the schema-shared
+    ``BENCH_speculation.json`` at the repo root — the perf trajectory entry
+    ROADMAP asks for, now validated by ``repro.obs.export``.
     """
     import string
 
@@ -542,10 +543,9 @@ def bench_speculation_throughput(rows, quick, smoke=False):
             },
         }
 
-    out = Path(__file__).resolve().parents[1] / "BENCH_speculation.json"
-    out.write_text(json.dumps(report, indent=2, sort_keys=True) + "\n")
-    rows.append(("speculation.json", 0, str(out.name),
+    rows.append(("speculation.json", 0, "BENCH_speculation.json",
                  "machine-readable perf trajectory entry"))
+    return report
 
 
 def bench_recognizer(rows, quick):
@@ -594,6 +594,15 @@ def bench_engine_roofline(rows):
         )
 
 
+def _json_value(v):
+    """Coerce a CSV-row value to a JSON-native type (numpy scalars -> python)."""
+    if hasattr(v, "item"):
+        v = v.item()
+    if isinstance(v, (bool, int, float, str)) or v is None:
+        return v
+    return str(v)
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", default=True)
@@ -601,6 +610,9 @@ def main(argv=None) -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="CI-tiny sizes (implies --quick)")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--no-bench-json", dest="bench_json", action="store_false",
+                    default=True,
+                    help="skip writing BENCH_<gate>.json perf-trajectory files")
     args = ap.parse_args(argv)
     if args.smoke:
         args.quick = True
@@ -629,12 +641,38 @@ def main(argv=None) -> None:
         "memory": lambda: bench_memory(rows, args.quick),
         "engine_roofline": lambda: bench_engine_roofline(rows),
     }
+    from repro.obs.export import write_bench_json
+
+    repo_root = Path(__file__).resolve().parents[1]
+    config = {"quick": args.quick, "smoke": args.smoke, "only": args.only}
     for name, fn in benches.items():
         if args.only and name != args.only:
             continue
         t0 = time.time()
-        fn()
-        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+        start = len(rows)
+        extra = fn()
+        wall_s = time.time() - t0
+        print(f"# {name} done in {wall_s:.1f}s", file=sys.stderr)
+        if not args.bench_json:
+            continue
+        # every gate leaves one BENCH_<gate>.json perf-trajectory entry with
+        # the shared {name, timestamp, config, metrics} schema; the CSV rows
+        # the gate produced go under metrics["rows"], richer per-gate
+        # structures (the speculation report) under metrics["report"]
+        metrics = {
+            "rows": [
+                {"name": r, "param": _json_value(p), "value": _json_value(v),
+                 "derived": str(d)}
+                for r, p, v, d in rows[start:]
+            ],
+            "wall_s": round(wall_s, 3),
+        }
+        if extra is not None:
+            metrics["report"] = extra
+        bench_name = "speculation" if name == "speculation_throughput" else name
+        out = write_bench_json(bench_name, config=config, metrics=metrics,
+                               out_dir=repo_root)
+        print(f"# wrote {out.name}", file=sys.stderr)
     print("name,param,value,derived")
     for name, param, value, derived in rows:
         print(f"{name},{param},{value},{derived}")

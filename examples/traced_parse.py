@@ -1,0 +1,99 @@
+"""Traced parsing: where does a parse spend its time?
+
+    PYTHONPATH=src python examples/traced_parse.py [--smoke]
+
+The paper's cost model attributes parallel parse time to phases — chunk
+reach, the associative join, build&merge — and the serving stack adds two
+more buckets: queue wait and batched device compute.  This example turns on
+the observability layer (ROADMAP "Observability") and shows all of it
+through the supported surface only:
+
+  * ``ParserConfig(obs=ObsConfig(enabled=True, span_log=...))`` — tracing
+    on, spans mirrored to a JSONL file;
+  * a direct ``parse`` (phase-split spans: reach / join / build&merge /
+    host build) and a ``submit`` → ticket round trip (queue-wait +
+    batch-compute spans), both carrying a ``trace_id`` on the result;
+  * the span tree, validated and pretty-printed from the JSONL log;
+  * ``Parser.stats()`` as a metrics view: cataloged counters/gauges, the
+    per-bucket queue/compute p50/p99 split, and the static HLO cost of
+    each compiled phase program;
+  * the Prometheus rendering of the same registry.
+"""
+
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parents[1] / "src"))
+
+import repro
+from repro.obs import prometheus_text, read_spans_jsonl, validate_span_tree
+
+
+def print_tree(spans, trace_id):
+    tree = validate_span_tree(spans, trace_id)
+    root = tree["root"]
+    print(f"  trace {trace_id}  root={root['name']}  "
+          f"{root['duration_s'] * 1e3:8.2f} ms  attrs={root['attrs']}")
+    for c in sorted(tree["children"], key=lambda s: s["t_start_s"]):
+        print(f"    └─ {c['name']:<24s} {c['duration_s'] * 1e3:8.2f} ms")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI run (default sizes already are)")
+    ap.parse_args()
+
+    span_log = Path("spans.jsonl")
+    span_log.unlink(missing_ok=True)
+
+    cfg = repro.ParserConfig(
+        regex="(a|b|ab)+",
+        n_chunks=4,
+        obs=repro.ObsConfig(enabled=True, span_log=str(span_log)),
+    )
+    with repro.Parser(cfg) as parser:
+        # direct route: phase-split spans around each jitted program
+        direct = parser.parse("abab" * 64)
+        print(f"parse ok={direct.ok} backend={direct.backend} "
+              f"bucket={direct.bucket} trace_id={direct.trace_id}")
+
+        # service route: queue-wait vs batch-compute attribution
+        tickets = [parser.submit("ab" * n) for n in (8, 16, 24)]
+        served = [t.result() for t in tickets]
+        print(f"served {len(served)} tickets "
+              f"(trace_ids {[r.trace_id for r in served]})")
+
+        spans = read_spans_jsonl(span_log)
+        print(f"\nspan log: {len(spans)} spans in {span_log}")
+        print("\ndirect route (phase attribution):")
+        print_tree(spans, direct.trace_id)
+        print("\nticket route (queue vs compute):")
+        print_tree(spans, served[0].trace_id)
+
+        stats = parser.stats()
+        print("\nper-bucket latency split (queue wait vs device compute):")
+        for bucket, d in stats["parse"]["buckets"].items():
+            print(f"  bucket {bucket}: served={d['served']} "
+                  f"p99_queue={d['p99_queue_s'] * 1e3:.2f} ms "
+                  f"p99_compute={d['p99_compute_s'] * 1e3:.2f} ms")
+
+        print("\nstatic HLO cost per compiled bucket (flops / bytes):")
+        for bucket, phases in (stats["hlo"] or {}).items():
+            t = phases["total"]
+            print(f"  bucket {bucket}: {t['flops']:.3g} flops, "
+                  f"{t['bytes']:.3g} bytes "
+                  f"(reach {phases['reach']['flops']:.3g}, "
+                  f"join {phases['join']['flops']:.3g}, "
+                  f"build&merge {phases['build_merge']['flops']:.3g})")
+
+        print("\nprometheus exposition (first 12 lines):")
+        for line in prometheus_text(stats["metrics"]).splitlines()[:12]:
+            print(f"  {line}")
+
+    span_log.unlink(missing_ok=True)   # keep example runs tidy
+
+
+if __name__ == "__main__":
+    main()

@@ -72,3 +72,10 @@ for ex in examples/*.py; do
 done
 
 python -m benchmarks.run --quick --only tab5
+
+# observability smoke gate: traced parses on every registered backend leave
+# schema-valid span trees in the JSONL log (direct + ticket routes), metric
+# names stay inside METRIC_CATALOG, the Prometheus rendering is non-empty,
+# and every BENCH_*.json the gates above refreshed matches the shared
+# {name, timestamp, config, metrics} perf-trajectory schema
+python scripts/obs_smoke.py

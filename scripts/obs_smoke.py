@@ -1,0 +1,105 @@
+"""CI obs smoke gate: the observability layer end-to-end on tiny inputs.
+
+    PYTHONPATH=src python scripts/obs_smoke.py
+
+Four checks, all through the public facade (``repro.Parser`` with
+``ParserConfig(obs=...)``):
+
+  1. traced parse on EVERY registered backend — the direct ``parse`` route
+     and the ``submit``/ticket route both leave a complete span tree in the
+     JSONL log (one root, parents resolve, child durations bounded by the
+     root: ``validate_span_tree``);
+  2. the span taxonomy holds — ``parse.request`` roots with phase children
+     (reach/join/build&merge) on the direct route, queue-wait + batch-compute
+     children on the ticket route;
+  3. metric-name rot guard — every name in every registry snapshot is in
+     ``METRIC_CATALOG`` (``validate_metric_names``), and ``prometheus_text``
+     renders the snapshot;
+  4. every ``BENCH_*.json`` at the repo root parses against the shared
+     perf-trajectory schema (``validate_bench_report``).
+
+Exits non-zero on the first violated invariant, printing which one.
+"""
+
+import json
+import sys
+import tempfile
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parents[1] / "src"))
+
+import repro
+from repro.obs import (
+    prometheus_text,
+    read_spans_jsonl,
+    validate_bench_report,
+    validate_metric_names,
+    validate_span_tree,
+)
+
+PHASE_SPANS = {"phase.reach", "phase.join", "phase.build_merge",
+               "phase.host_build"}
+
+
+def check_backend(backend: str, workdir: Path) -> None:
+    log = workdir / f"spans_{backend}.jsonl"
+    cfg = repro.ParserConfig(
+        regex="(a|b|ab)+", backend=backend, n_chunks=4,
+        obs={"enabled": True, "span_log": str(log)},
+    )
+    with repro.Parser(cfg) as p:
+        direct = p.parse("abab" * 8)
+        assert direct.ok, f"{backend}: traced parse rejected a valid text"
+        assert direct.trace_id, f"{backend}: traced parse has no trace_id"
+
+        ticket = p.submit("abab" * 4)
+        served = ticket.result()
+        assert served.ok and served.trace_id, \
+            f"{backend}: ticket route lost its trace"
+        assert served.trace_id != direct.trace_id, \
+            f"{backend}: trace_id reused across requests"
+
+        snap = p.stats()["metrics"]
+        validate_metric_names(snap)
+        assert prometheus_text(snap).strip(), \
+            f"{backend}: empty prometheus rendering"
+        p.obs.close()
+
+    spans = read_spans_jsonl(log)
+    for tid, route in ((direct.trace_id, "direct"),
+                       (served.trace_id, "ticket")):
+        tree = validate_span_tree(spans, tid)
+        root = tree["root"]
+        assert root["name"] == "parse.request", \
+            f"{backend}/{route}: root span is {root['name']!r}"
+        children = {s["name"] for s in spans
+                    if s["trace_id"] == tid and s["parent_id"] is not None}
+        want = (PHASE_SPANS if route == "direct"
+                else {"parse.queue_wait", "parse.batch_compute"})
+        missing = want - children
+        assert not missing, f"{backend}/{route}: missing spans {sorted(missing)}"
+    print(f"ok: {backend:7s} — {len(spans)} spans, both routes form valid trees")
+
+
+def check_bench_reports(repo_root: Path) -> None:
+    reports = sorted(repo_root.glob("BENCH_*.json"))
+    assert reports, "no BENCH_*.json at repo root (run benchmarks/run.py)"
+    for path in reports:
+        try:
+            validate_bench_report(json.loads(path.read_text()))
+        except ValueError as e:
+            raise SystemExit(f"{path.name}: schema violation: {e}")
+        print(f"ok: {path.name} matches the perf-trajectory schema")
+
+
+def main() -> None:
+    repo_root = Path(__file__).resolve().parents[1]
+    with tempfile.TemporaryDirectory() as tmp:
+        for backend in repro.list_backends():
+            check_backend(backend, Path(tmp))
+    check_bench_reports(repo_root)
+    print("obs smoke gate: all checks passed")
+
+
+if __name__ == "__main__":
+    main()

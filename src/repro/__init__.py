@@ -27,6 +27,7 @@ _EXPORTS = {
     "Parser": ("repro.api", "Parser"),
     "ParserConfig": ("repro.api", "ParserConfig"),
     "SLOTargets": ("repro.api", "SLOTargets"),
+    "ObsConfig": ("repro.obs", "ObsConfig"),
     "ParseResult": ("repro.api", "ParseResult"),
     "ParseTicket": ("repro.api", "ParseTicket"),
     "ParserStream": ("repro.api", "ParserStream"),
@@ -44,7 +45,7 @@ _EXPORTS = {
     "BudgetExceeded": ("repro.errors", "BudgetExceeded"),
 }
 
-__all__ = sorted(_EXPORTS) + ["api", "errors"]
+__all__ = sorted(_EXPORTS) + ["api", "errors", "obs"]
 
 if TYPE_CHECKING:  # static importers see the real types
     from .api import (  # noqa: F401
@@ -68,12 +69,13 @@ if TYPE_CHECKING:  # static importers see the real types
         ParseError,
         SessionNotFound,
     )
+    from .obs import ObsConfig  # noqa: F401
 
 
 def __getattr__(name: str):
     import importlib
 
-    if name in ("api", "errors"):   # advertised submodules: repro.api / repro.errors
+    if name in ("api", "errors", "obs"):   # advertised submodules
         value = importlib.import_module(f"repro.{name}")
         globals()[name] = value
         return value

@@ -56,6 +56,7 @@ from .core.matrices import ParserMatrices, build_matrices
 from .core.segments import SegmentTable, compute_segments
 from .core.slpf import SLPF
 from .errors import AdmissionError, BudgetExceeded, ParseError, SessionNotFound
+from .obs import ObsConfig, ObsHandle
 from .serve.parse_service import ParseRequest, ParseService
 from .serve.stream_service import StreamService
 
@@ -141,6 +142,10 @@ class ParserConfig:
     mesh_rules: Optional[Tuple[Tuple[str, Tuple[str, ...]], ...]] = None
     # service-level objectives (admission + stats grading)
     slo: Optional[SLOTargets] = None
+    # observability (repro/obs): None = metrics only (tracing off); an
+    # ObsConfig (or its dict) switches on spans / JSONL logs / profiler
+    # annotations / per-bucket hlo_stats static cost in ``stats()``
+    obs: Optional[ObsConfig] = None
 
     def __post_init__(self):
         if not isinstance(self.regex, str) or not self.regex:
@@ -218,6 +223,8 @@ class ParserConfig:
             object.__setattr__(self, "mesh_rules", tuple(sorted(norm)))
         if self.slo is not None and isinstance(self.slo, Mapping):
             object.__setattr__(self, "slo", SLOTargets(**dict(self.slo)))
+        if self.obs is not None and isinstance(self.obs, Mapping):
+            object.__setattr__(self, "obs", ObsConfig(**dict(self.obs)))
 
     # ------------------------------------------------------- dict round-trip
 
@@ -294,6 +301,9 @@ class ParseResult:
     # ({"width_mean", "width_max", "n_chunks_real", "product_rows",
     #   "ell_pad", "depth"}); None on dense backends
     speculation: Optional[Dict[str, Any]] = None
+    # the request's trace ID when the parser's tracer is enabled — the key
+    # into the span log (obs/export.py validate_span_tree); else None
+    trace_id: Optional[str] = None
 
     # ------------------------------------------------------------- queries
 
@@ -411,10 +421,25 @@ class ParseTicket:
                     f"parse request {self._request.rid} is no longer queued"
                 )
         self._service.reap(self._request)
+        req = self._request
+        if req.trace_id is not None:
+            # the root span closes here — collection ends the request's
+            # lifetime; queue-wait/compute children were emitted at pickup
+            # against the pre-minted root id
+            self._parser.engine.obs.emit(
+                "parse.request",
+                t_start_s=req.submitted_at,
+                duration_s=req.latency_s,
+                trace_id=req.trace_id,
+                span_id=req.root_span_id,
+                bucket=list(req.bucket) if req.bucket else None,
+                n_chars=len(req.classes) if req.classes is not None else 0,
+            )
         self._result = self._parser._wrap(
-            self._request.slpf,
-            bucket=self._request.bucket,
-            latency_s=self._request.latency_s,
+            req.slpf,
+            bucket=req.bucket,
+            latency_s=req.latency_s,
+            trace_id=req.trace_id,
         )
         return self._result
 
@@ -519,12 +544,16 @@ class Parser:
         if matrices is None:
             matrices = build_matrices(compute_segments(config.regex))
         self.matrices = matrices
+        # one ObsHandle for the whole parser: the engine carries it, every
+        # layer (services, streams, distribution) records into it
+        self.obs = ObsHandle.from_config(config.obs)
         self.engine = ParserEngine(
             matrices,
             backend=config.build_backend(),
             min_chunk_len=config.min_chunk_len,
             mesh=config.build_mesh(),
             mesh_rules=config.build_mesh_rules(),
+            obs=self.obs,
         )
         self._parse_service: Optional[ParseService] = None
         self._stream_service: Optional[StreamService] = None
@@ -637,6 +666,7 @@ class Parser:
         agg["parses"] += 1
         agg["width_mean"] += (spec["width_mean"] - agg["width_mean"]) / agg["parses"]
         agg["width_max"] = max(agg["width_max"], spec["width_max"])
+        self.obs.metrics.histogram("speculation_width").observe(spec["width_max"])
         return spec
 
     def _wrap(
@@ -645,6 +675,7 @@ class Parser:
         *,
         bucket: Optional[Tuple[int, int]] = None,
         latency_s: Optional[float] = None,
+        trace_id: Optional[str] = None,
     ) -> ParseResult:
         return ParseResult(
             forest=slpf,
@@ -653,6 +684,7 @@ class Parser:
             latency_s=latency_s,
             n_chunks=self.config.n_chunks,
             speculation=self._speculation(slpf, bucket),
+            trace_id=trace_id,
         )
 
     @property
@@ -709,8 +741,13 @@ class Parser:
         single-text distributed program shards the chunk dim over EVERY
         chunk mesh axis ('pod' × 'data') — ``parse_batch`` instead keeps
         batch slots over 'data' and chunks over 'pod'.
+
+        With tracing on (``ParserConfig(obs=ObsConfig(enabled=True))``)
+        the call runs queue-free through the engine's phase-split route
+        (bit-identical to the fused program) so the span log carries one
+        ``parse.request`` root with real per-phase children.
         """
-        if self.engine.mesh is not None:
+        if self.obs.enabled or self.engine.mesh is not None:
             from .serve.parse_service import BucketStats
 
             if deadline_s is None:
@@ -720,11 +757,33 @@ class Parser:
             bucket = self.engine.bucket_shape(len(classes), self.config.n_chunks)
             svc._admit(bucket, deadline_s)
             stats = svc._buckets.setdefault(bucket, BucketStats())
+            obs = self.obs
+            trace_id = obs.new_trace_id()
             t0 = time.perf_counter()
-            slpf = self.engine.parse(classes, n_chunks=self.config.n_chunks)
+            if obs.enabled:
+                with obs.span(
+                    "parse.request",
+                    trace_id=trace_id,
+                    bucket=list(bucket),
+                    backend=self.backend_name,
+                    n_chars=len(classes),
+                ):
+                    slpf = self.engine.parse_traced(
+                        classes, n_chunks=self.config.n_chunks
+                    )
+            else:
+                slpf = self.engine.parse(classes, n_chunks=self.config.n_chunks)
             latency = time.perf_counter() - t0
-            stats.record(latency)       # admission/SLO learn this route too
-            return self._wrap(slpf, bucket=bucket, latency_s=latency)
+            # admission/SLO learn this route too; it never queues, so the
+            # whole latency is compute
+            stats.record(latency, queue_s=0.0, compute_s=latency)
+            m = obs.metrics
+            m.counter("requests_total", service="parse").inc()
+            m.counter("served_total", service="parse").inc()
+            m.counter("chars_total", service="parse").inc(len(classes))
+            return self._wrap(
+                slpf, bucket=bucket, latency_s=latency, trace_id=trace_id
+            )
         return self.submit(text, deadline_s=deadline_s).result()
 
     def parse_batch(
@@ -774,15 +833,35 @@ class Parser:
             out[bucket] = grade
         return out
 
+    def _hlo_static_cost(self, ps: Optional[Dict]) -> Optional[Dict[str, Any]]:
+        """Per-bucket static modeled cost (``launch/hlo_stats.py``) of the
+        compiled phase programs — attached only when tracing is on and the
+        ObsConfig keeps ``hlo`` enabled (one extra lowering per bucket,
+        memoized on the engine).  Mesh engines skip it: their phases fuse
+        inside one shard_map program with no per-phase HLO to attribute."""
+        cfg = self.obs.config
+        if not (self.obs.enabled and cfg.hlo) or self.engine.mesh is not None:
+            return None
+        buckets = ps["buckets"] if ps else {}
+        out: Dict[str, Any] = {}
+        for bucket in buckets:
+            c, k = bucket
+            out[f"{c}x{k}"] = self.engine.phase_static_cost(c, k)
+        return out
+
     def stats(self) -> Dict[str, Any]:
         """One aggregated view over both services + SLO conformance.
 
         ``parse``/``stream`` are the raw service stats (present once the
-        corresponding service has been touched); ``slo.buckets`` grades every
-        observed bucket against the config targets (``p50_ok``/``p99_ok``
-        appear only when targets are set); ``speculation`` (sparse backend
-        only, else None) reports the carried product rows S vs ℓp and the
-        per-bucket observed feasible-start widths (mean/max over parses).
+        corresponding service has been touched); ``metrics`` is the
+        registry snapshot — the counter/gauge/histogram source of truth the
+        service dicts are views over; ``hlo`` (tracing on, single-device)
+        attaches each compiled bucket's static phase cost; ``slo.buckets``
+        grades every observed bucket against the config targets
+        (``p50_ok``/``p99_ok`` appear only when targets are set);
+        ``speculation`` (sparse backend only, else None) reports the carried
+        product rows S vs ℓp and the per-bucket observed feasible-start
+        widths (mean/max over parses).
         """
         slo = self.config.slo
         # evaluate each service's stats property ONCE: it rebuilds the full
@@ -805,6 +884,8 @@ class Parser:
             "pending": (ps["pending"] if ps else 0) + (ss["pending"] if ss else 0),
             "parse": ps,
             "stream": ss,
+            "metrics": self.obs.metrics.snapshot(),
+            "hlo": self._hlo_static_cost(ps),
             "speculation": speculation,
             "slo": {
                 "targets": dataclasses.asdict(slo) if slo is not None else None,
@@ -813,10 +894,21 @@ class Parser:
             },
         }
 
+    def close(self) -> None:
+        """Flush observability sinks (the JSONL span log, if configured)."""
+        self.obs.close()
+
+    def __enter__(self) -> "Parser":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
 
 __all__ = [
     "AdmissionError",
     "BudgetExceeded",
+    "ObsConfig",
     "ParseError",
     "ParseResult",
     "ParseTicket",

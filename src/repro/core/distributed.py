@@ -155,7 +155,29 @@ class DistributedEngine:
 
     def _bump(self):
         # Python side effect at trace time, like the engine's counted_core
-        self.engine._compile_count += 1
+        # (routes through the engine so the metrics registry sees it too)
+        self.engine._bump_compiles()
+
+    def _product_nbytes(self) -> int:
+        """Bytes of ONE chunk product in the backend's representation —
+        the unit of the all-gather payload accounting (packed words and
+        sparse rows shrink it automatically)."""
+        t = self.engine.tables
+        eye = self.engine.backend.identity_product(t.ell_pad, dtype=t.N.dtype)
+        return int(eye.size) * eye.dtype.itemsize
+
+    def _count_allgather(self, n_products: int, gather_axes) -> None:
+        """Record the product-stack collective payload for one dispatch.
+
+        The contract's step 2 moves the full (c, …) stack to every device;
+        the counted payload is the gathered stack's bytes (text-length
+        independent).  A degenerate mesh (no gather axes) moves nothing.
+        """
+        if not gather_axes:
+            return
+        self.engine.obs.metrics.counter("allgather_payload_bytes_total").inc(
+            n_products * self._product_nbytes()
+        )
 
     def _rep(self) -> NamedSharding:
         return NamedSharding(self.mesh, PartitionSpec())
@@ -301,6 +323,7 @@ class DistributedEngine:
             P = jnp.concatenate(
                 [P, jnp.broadcast_to(eye, (c_pad - c,) + eye.shape)], axis=0
             )
+        self._count_allgather(c_pad, self.chunk_axes)
         return self.join_program(P, t.I, t.F)
 
     # ---------------------------------------------------------------- parse
@@ -321,6 +344,7 @@ class DistributedEngine:
         c, k = eng.bucket_shape(len(classes), c_req)
         chunks = eng._pad_to(classes, c, k)
         t = eng.tables
+        self._count_allgather(c, self.chunk_axes)
         col0, cols = self.chunk_program(t.N, t.I, t.F, chunks)
         return eng._assemble(np.asarray(col0), np.asarray(cols), classes)
 
@@ -348,6 +372,7 @@ class DistributedEngine:
             batch = np.full((B, c, k), t.pad_class, dtype=np.int32)
             for row, i in enumerate(idxs):
                 batch[row] = eng._pad_to(classes_list[i], c, k)
+            self._count_allgather(B * c, self.batch_chunk_axes)
             col0s, colss = self.batched_program(t.N, t.I, t.F, batch)
             col0s = np.asarray(col0s)
             colss = np.asarray(colss)

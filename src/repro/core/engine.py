@@ -87,6 +87,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..obs import ObsHandle
 from .backend import (
     ParserBackend,
     get_backend,
@@ -243,6 +244,7 @@ class ParserEngine:
         min_chunk_len: int = 8,
         mesh=None,
         mesh_rules=None,
+        obs: Optional[ObsHandle] = None,
     ):
         if isinstance(matrices_or_table, SegmentTable):
             matrices = build_matrices(matrices_or_table)
@@ -259,17 +261,29 @@ class ParserEngine:
         self.min_chunk_len = max(1, min_chunk_len)
         self.mesh = mesh
         self.mesh_rules = mesh_rules
+        # the observability seam every layer over this engine records into
+        # (core/stream.py, core/distributed.py, both services, the facade);
+        # a default handle is a disabled tracer + live metrics registry
+        self.obs = obs if obs is not None else ObsHandle()
 
         self._compile_count = 0
         self._phases: Optional[PhasePrograms] = None
         self._dist = None
+        self._seen_batch_shapes: set = set()
+        self._hlo_memo: Dict[Tuple[int, int], Dict[str, Dict[str, float]]] = {}
 
         def counted_core(N, I, F, chunks, _core=make_parse_core(self.backend)):
             # Python side effect at trace time: counts compiled programs.
-            self._compile_count += 1
+            self._bump_compiles()
             return _core(N, I, F, chunks)
 
         self._jit_batched = jax.jit(self.backend.batch_core(counted_core))
+
+    def _bump_compiles(self) -> None:
+        """One device program traced — a re-jit event (trace-time side
+        effect, mirrored into the metrics registry)."""
+        self._compile_count += 1
+        self.obs.metrics.counter("compiled_programs_total").inc()
 
     # ------------------------------------------------------------- helpers
 
@@ -286,10 +300,7 @@ class ParserEngine:
         counted into ``compile_count`` like every other engine program.
         """
         if self._phases is None:
-            def bump():
-                self._compile_count += 1
-
-            self._phases = PhasePrograms(self.backend, on_trace=bump)
+            self._phases = PhasePrograms(self.backend, on_trace=self._bump_compiles)
         return self._phases
 
     @property
@@ -371,9 +382,17 @@ class ParserEngine:
         for i, cls in enumerate(classes_list):
             groups.setdefault(self.bucket_shape(len(cls), n_chunks), []).append(i)
 
+        m = self.obs.metrics
         results: List[Optional[SLPF]] = [None] * len(texts)
         for (c, k), idxs in sorted(groups.items()):
             B = _next_pow2(len(idxs))
+            # bucket program-cache accounting: a (B, c, k) shape seen before
+            # dispatches a compiled program; a new one is a re-jit event
+            if (B, c, k) in self._seen_batch_shapes:
+                m.counter("bucket_cache_hits_total").inc()
+            else:
+                self._seen_batch_shapes.add((B, c, k))
+                m.counter("bucket_cache_misses_total").inc()
             batch = np.full((B, c, k), self.tables.pad_class, dtype=np.int32)
             for row, i in enumerate(idxs):
                 batch[row] = self._pad_to(classes_list[i], c, k)
@@ -394,6 +413,90 @@ class ParserEngine:
         )
         columns = unpack_bits(packed, self.tables.ell, axis=-1)
         return SLPF(table=self.table, columns=columns, classes=classes)
+
+    # -------------------------------------------------------- observability
+
+    def parse_traced(self, text, n_chunks: int = 8) -> SLPF:
+        """Parse one text with per-phase spans (the observability route).
+
+        Runs the separately-jitted phase programs — the same bodies the
+        fused program composes, bit-identical (the phase-split route of
+        ``tests/test_conformance.py``) — so each phase boundary is a real
+        host-side seam that can be timed honestly: every span blocks on its
+        device result before closing.  Queue-free: this is the direct route
+        ``Parser.parse`` takes when tracing is enabled (mesh engines keep
+        their fused distributed program and report one ``phase.device_parse``
+        span instead — the phases live inside one ``shard_map``).
+        """
+        obs = self.obs
+        classes = self.classes_of_text(text)
+        if self.mesh is not None:
+            with obs.span("phase.device_parse", n_chars=len(classes)):
+                slpf = self.dist.parse(classes, n_chunks=n_chunks)
+            return slpf
+        c, k = self.bucket_shape(len(classes), n_chunks)
+        chunks = jnp.asarray(self._pad_to(classes, c, k))
+        t = self.tables
+        with obs.span("phase.reach", bucket=[c, k], n_chars=len(classes)):
+            P = jax.block_until_ready(self.phases.reach(t.N, chunks))
+        with obs.span("phase.join", n_products=c):
+            Jf, Jb, col0p = jax.block_until_ready(self.phases.join(P, t.I, t.F))
+        with obs.span("phase.build_merge", bucket=[c, k]):
+            cols = jax.block_until_ready(
+                self.phases.build_merge(t.N, chunks, Jf, Jb)
+            )
+        with obs.span("phase.host_build", n_chars=len(classes)):
+            slpf = self._assemble(np.asarray(col0p), np.asarray(cols), classes)
+        return slpf
+
+    def phase_static_cost(self, c: int, k: int) -> Dict[str, Dict[str, float]]:
+        """Static modeled cost of one bucket's compiled phase programs.
+
+        Lowers the reach / join / build&merge phase programs at this bucket's
+        shapes and runs ``launch/hlo_stats.py`` over the optimized HLO —
+        trip-count-aware flops / HBM-model bytes / collective bytes, the
+        modeled numbers ``Parser.stats()`` places next to the observed phase
+        times.  One extra lowering+compile per bucket, memoized forever, and
+        recorded once into the metrics registry as per-phase gauges.
+        """
+        key = (int(c), int(k))
+        if key in self._hlo_memo:
+            return self._hlo_memo[key]
+        from ..launch.hlo_stats import analyze_hlo_text
+
+        t = self.tables
+        eye = self.backend.identity_product(t.ell_pad, dtype=t.N.dtype)
+        chunks_sds = jax.ShapeDtypeStruct((c, k), jnp.int32)
+        P_sds = jax.ShapeDtypeStruct((c,) + eye.shape, eye.dtype)
+        J_sds = jax.ShapeDtypeStruct((c, t.ell_pad), jnp.float32)
+        phases = self.phases
+        lowered = {
+            "reach": (phases.reach, (t.N, chunks_sds)),
+            "join": (phases.join, (P_sds, t.I, t.F)),
+            "build_merge": (phases.build_merge, (t.N, chunks_sds, J_sds, J_sds)),
+        }
+        out: Dict[str, Dict[str, float]] = {}
+        total = {"flops": 0.0, "bytes": 0.0, "collective_bytes": 0.0}
+        bucket_label = f"{c}x{k}"
+        m = self.obs.metrics
+        for phase, (prog, args) in lowered.items():
+            stats = analyze_hlo_text(prog.lower(*args).compile().as_text())
+            entry = {
+                "flops": stats.flops,
+                "bytes": stats.bytes,
+                "collective_bytes": stats.coll_bytes,
+            }
+            out[phase] = entry
+            for field_name in total:
+                total[field_name] += entry[field_name]
+            m.gauge("hlo_flops", bucket=bucket_label, phase=phase).set(entry["flops"])
+            m.gauge("hlo_bytes", bucket=bucket_label, phase=phase).set(entry["bytes"])
+            m.gauge(
+                "hlo_collective_bytes", bucket=bucket_label, phase=phase
+            ).set(entry["collective_bytes"])
+        out["total"] = total
+        self._hlo_memo[key] = out
+        return out
 
     def count_accepting(self, text, n_chunks: int = 8) -> int:
         return self.parse(text, n_chunks).count_trees()

@@ -313,6 +313,12 @@ class StreamingParser:
         shapes) — zero reach work for sealed chunks.  Bit-identical to a
         cold ``ParserEngine.parse`` of the same prefix.
         """
+        with self.engine.obs.span(
+            "stream.query", n_chars=self.n, n_sealed=self.n_sealed_chunks
+        ):
+            return self._current_slpf()
+
+    def _current_slpf(self) -> SLPF:
         eng = self.engine
         t = eng.tables
         chunks = self._chunk_classes()
@@ -414,10 +420,14 @@ class StreamingParser:
         self._sealed_products[i] = None
         return int(p.size) * p.dtype.itemsize
 
+    def _count_rebuild(self) -> None:
+        self.rebuilds += 1
+        self.engine.obs.metrics.counter("stream_rebuilds_total").inc()
+
     def _ensure_cache(self) -> None:
         if self._cold:
             self._cold = False
-            self.rebuilds += 1
+            self._count_rebuild()
             self._sealed_products = [
                 self._reach_piece(s) for s in self._sealed_classes
             ]
@@ -428,7 +438,7 @@ class StreamingParser:
             return
         if any(p is None for p in self._sealed_products):
             # partial eviction: re-reach only the dropped chunks
-            self.rebuilds += 1
+            self._count_rebuild()
             self._sealed_products = [
                 p if p is not None else self._reach_piece(s)
                 for p, s in zip(self._sealed_products, self._sealed_classes)

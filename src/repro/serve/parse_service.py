@@ -64,9 +64,28 @@ from ..errors import AdmissionError, BudgetExceeded
 LATENCY_WINDOW = 512
 
 
+def _window_quantile(window: Deque[float], q: float) -> float:
+    if not window:
+        return 0.0
+    # nearest-rank (no interpolation): an SLO predictor must report a latency
+    # that was actually observed — interpolating between the two top samples
+    # under-reports p99 on small windows (a 2-sample window's p99 would fall
+    # just below its own slowest sample)
+    return float(
+        np.percentile(np.fromiter(window, dtype=float), q, method="higher")
+    )
+
+
 @dataclasses.dataclass
 class BucketStats:
-    """Served-count / latency aggregates for one device-program bucket."""
+    """Served-count / latency aggregates for one device-program bucket.
+
+    Three separate sliding windows: end-to-end latency (the admission
+    predictor), queue wait (submit → batch pickup) and batch compute (the
+    device program) — previously one window conflated wait with compute, so
+    a deep queue read as a slow device.  Each window wraps independently at
+    ``LATENCY_WINDOW`` samples and reports its own p50/p99.
+    """
 
     served: int = 0
     batches: int = 0
@@ -75,12 +94,27 @@ class BucketStats:
     window: Deque[float] = dataclasses.field(
         default_factory=lambda: deque(maxlen=LATENCY_WINDOW)
     )
+    queue_window: Deque[float] = dataclasses.field(
+        default_factory=lambda: deque(maxlen=LATENCY_WINDOW)
+    )
+    compute_window: Deque[float] = dataclasses.field(
+        default_factory=lambda: deque(maxlen=LATENCY_WINDOW)
+    )
 
-    def record(self, latency_s: float) -> None:
+    def record(
+        self,
+        latency_s: float,
+        queue_s: Optional[float] = None,
+        compute_s: Optional[float] = None,
+    ) -> None:
         self.served += 1
         self.total_latency_s += latency_s
         self.max_latency_s = max(self.max_latency_s, latency_s)
         self.window.append(latency_s)
+        if queue_s is not None:
+            self.queue_window.append(queue_s)
+        if compute_s is not None:
+            self.compute_window.append(compute_s)
 
     @property
     def mean_latency_s(self) -> float:
@@ -88,9 +122,7 @@ class BucketStats:
 
     def latency_quantile_s(self, q: float) -> float:
         """Latency quantile (q in [0,100]) over the recent sample window."""
-        if not self.window:
-            return 0.0
-        return float(np.percentile(np.fromiter(self.window, dtype=float), q))
+        return _window_quantile(self.window, q)
 
     def as_dict(self) -> Dict[str, float]:
         return {
@@ -100,6 +132,10 @@ class BucketStats:
             "p50_latency_s": self.latency_quantile_s(50.0),
             "p99_latency_s": self.latency_quantile_s(99.0),
             "max_latency_s": self.max_latency_s,
+            "p50_queue_s": _window_quantile(self.queue_window, 50.0),
+            "p99_queue_s": _window_quantile(self.queue_window, 99.0),
+            "p50_compute_s": _window_quantile(self.compute_window, 50.0),
+            "p99_compute_s": _window_quantile(self.compute_window, 99.0),
         }
 
 
@@ -132,9 +168,16 @@ class ParseRequest:
     classes: Optional[np.ndarray] = None
     bucket: Optional[Tuple[int, int]] = None
     submitted_at: float = dataclasses.field(default_factory=time.perf_counter)
+    # tracing: minted at submit when the engine's tracer is enabled; the
+    # root span id lets retroactive queue-wait/compute spans parent to the
+    # ``parse.request`` root the ticket emits at collection
+    trace_id: Optional[str] = None
+    root_span_id: Optional[str] = None
     # filled by the service:
     slpf: Optional[SLPF] = None
     latency_s: Optional[float] = None
+    queue_s: Optional[float] = None
+    compute_s: Optional[float] = None
 
     @property
     def done(self) -> bool:
@@ -205,7 +248,11 @@ class ParseService:
         serving the request would almost surely miss, so it is rejected
         up-front with ``AdmissionError`` instead of wasting a batch slot.
         """
+        m = self.engine.obs.metrics
         if self.max_pending is not None and len(self._queue) >= self.max_pending:
+            m.counter(
+                "admission_rejects_total", service="parse", cause="budget"
+            ).inc()
             raise BudgetExceeded(
                 f"parse queue is at its max_pending budget ({self.max_pending})",
                 budget=self.max_pending,
@@ -215,6 +262,9 @@ class ParseService:
             return
         predicted = self.admission_p99_s(bucket)
         if deadline_s <= 0.0 or predicted > deadline_s:
+            m.counter(
+                "admission_rejects_total", service="parse", cause="deadline"
+            ).inc()
             raise AdmissionError(
                 f"bucket {bucket} p99 {predicted * 1e3:.1f}ms exceeds the "
                 f"remaining deadline {deadline_s * 1e3:.1f}ms",
@@ -238,16 +288,27 @@ class ParseService:
         self._admit(bucket, deadline_s)
         # the bucket is observable (served=0, queue_depth>0) from this moment
         self._buckets.setdefault(bucket, BucketStats())
+        obs = self.engine.obs
         req = ParseRequest(
             rid=self._next_rid,
             text=text,
             classes=classes,
             bucket=bucket,
             submitted_at=time.perf_counter(),
+            trace_id=obs.new_trace_id(),
         )
+        if req.trace_id is not None:
+            # pre-mint the root span id so queue-wait/compute spans emitted
+            # mid-flight can parent to the request root before it is written
+            req.root_span_id = obs.tracer._new_span_id()
         self._next_rid += 1
         self._queue.append(req)
         self._peak_queue_depth = max(self._peak_queue_depth, len(self._queue))
+        m = obs.metrics
+        m.counter("requests_total", service="parse").inc()
+        m.counter("chars_total", service="parse").inc(len(classes))
+        m.gauge("queue_depth", service="parse").set(len(self._queue))
+        m.gauge("peak_queue_depth", service="parse").set(self._peak_queue_depth)
         return req
 
     def submit(
@@ -262,6 +323,9 @@ class ParseService:
         for req in self._queue:
             if req.rid == rid:
                 self._queue.remove(req)
+                m = self.engine.obs.metrics
+                m.counter("cancelled_total", service="parse").inc()
+                m.gauge("queue_depth", service="parse").set(len(self._queue))
                 return True
         return False
 
@@ -288,18 +352,46 @@ class ParseService:
         keep.extend(self._queue)  # untouched tail keeps its order
         self._queue = keep
 
+        picked_at = time.perf_counter()
         slpfs = self.engine.parse_batch(
             [req.classes for req in batch], n_chunks=self.n_chunks
         )
         now = time.perf_counter()
+        compute_s = now - picked_at
+        obs = self.engine.obs
         stats = self._buckets.setdefault(head_bucket, BucketStats())
         for req, slpf in zip(batch, slpfs):
             req.slpf = slpf
             req.latency_s = now - req.submitted_at
-            stats.record(req.latency_s)
+            req.queue_s = picked_at - req.submitted_at
+            req.compute_s = compute_s
+            stats.record(req.latency_s, queue_s=req.queue_s, compute_s=compute_s)
+            if req.trace_id is not None:
+                # queue residency is only known at pickup: retroactive spans
+                obs.emit(
+                    "parse.queue_wait",
+                    t_start_s=req.submitted_at,
+                    duration_s=req.queue_s,
+                    trace_id=req.trace_id,
+                    parent_id=req.root_span_id,
+                    bucket=list(head_bucket),
+                )
+                obs.emit(
+                    "parse.batch_compute",
+                    t_start_s=picked_at,
+                    duration_s=compute_s,
+                    trace_id=req.trace_id,
+                    parent_id=req.root_span_id,
+                    bucket=list(head_bucket),
+                    batch_size=len(batch),
+                )
             self._done.append(req)
         stats.batches += 1
         self.batches_run += 1
+        m = obs.metrics
+        m.counter("served_total", service="parse").inc(len(batch))
+        m.counter("batches_total", service="parse").inc()
+        m.gauge("queue_depth", service="parse").set(len(self._queue))
         return True
 
     def run(self) -> List[ParseRequest]:

@@ -59,6 +59,10 @@ class _PendingAppend:
     classes: np.ndarray
     offset: int = 0                      # chars already absorbed
     enqueued_at: float = 0.0
+    # tracing: one trace per append request; the pre-minted root span id
+    # parents the retroactive queue-wait/compute spans (see obs/trace.py)
+    trace_id: Optional[str] = None
+    root_span_id: Optional[str] = None
 
     @property
     def remaining(self) -> int:
@@ -141,12 +145,14 @@ class StreamService:
             ),
             last_touch=self._tick(),
         )
+        self.engine.obs.metrics.gauge("stream_sessions").set(len(self._sessions))
         return sid
 
     def close(self, sid: int) -> None:
         if sid not in self._sessions:
             raise SessionNotFound(sid)
         del self._sessions[sid]
+        self.engine.obs.metrics.gauge("stream_sessions").set(len(self._sessions))
 
     def _tick(self) -> int:
         self._seq += 1
@@ -178,11 +184,16 @@ class StreamService:
         """
         s = self._session(sid)
         classes = self.engine.classes_of_text(text)
+        obs = self.engine.obs
+        m = obs.metrics
         if len(classes):
             if (
                 self.max_pending_chars is not None
                 and self.pending_chars + len(classes) > self.max_pending_chars
             ):
+                m.counter(
+                    "admission_rejects_total", service="stream", cause="budget"
+                ).inc()
                 raise BudgetExceeded(
                     f"append of {len(classes)} chars would exceed the "
                     f"max_pending_chars budget ({self.max_pending_chars}; "
@@ -197,6 +208,10 @@ class StreamService:
             if deadline_s is not None:
                 predicted = self.admission_p99_s(bucket)
                 if deadline_s <= 0.0 or predicted > deadline_s:
+                    m.counter(
+                        "admission_rejects_total", service="stream",
+                        cause="deadline",
+                    ).inc()
                     raise AdmissionError(
                         f"stream bucket {bucket} p99 {predicted * 1e3:.1f}ms "
                         f"exceeds the remaining deadline {deadline_s * 1e3:.1f}ms",
@@ -210,11 +225,20 @@ class StreamService:
             self._buckets.setdefault(bucket, BucketStats())
             if not s.pending:
                 s.arrival_seq = self._tick()
-            s.pending.append(
-                _PendingAppend(classes=classes, enqueued_at=time.perf_counter())
+            p = _PendingAppend(
+                classes=classes,
+                enqueued_at=time.perf_counter(),
+                trace_id=obs.new_trace_id(),
             )
+            if p.trace_id is not None:
+                p.root_span_id = obs.tracer._new_span_id()
+            s.pending.append(p)
             s.last_touch = self._tick()
+            m.counter("appends_total", service="stream").inc()
+            m.counter("chars_total", service="stream").inc(len(classes))
+            m.gauge("queue_depth", service="stream").set(self.pending_appends)
         self._peak_queue_depth = max(self._peak_queue_depth, self.pending_appends)
+        m.gauge("peak_queue_depth", service="stream").set(self._peak_queue_depth)
         return len(classes)
 
     def _next_piece_len(self, s: StreamSession) -> int:
@@ -225,17 +249,65 @@ class StreamService:
         # the shapes a solo append would compile
         return s.parser._bucket_len(self._next_piece_len(s))
 
-    def _take_piece(self, s: StreamSession, m: int) -> Tuple[np.ndarray, Optional[float]]:
+    def _take_piece(
+        self, s: StreamSession, m: int
+    ) -> Tuple[np.ndarray, Optional[_PendingAppend]]:
         """Consume m chars from the head pending append; returns (classes,
-        enqueue-time if that append completed)."""
+        the append record if this piece completed it)."""
         head = s.pending[0]
         piece = head.classes[head.offset : head.offset + m]
         head.offset += m
-        completed_at = None
+        completed = None
         if head.remaining == 0:
-            completed_at = head.enqueued_at
+            completed = head
             s.pending.popleft()
-        return piece, completed_at
+        return piece, completed
+
+    def _finish_append(
+        self,
+        p: _PendingAppend,
+        bucket: int,
+        picked_at: float,
+        now: float,
+        *,
+        batch_size: int,
+    ) -> None:
+        """Latency bookkeeping + retroactive spans for one completed append."""
+        stats = self._buckets.setdefault(bucket, BucketStats())
+        stats.record(
+            now - p.enqueued_at,
+            queue_s=picked_at - p.enqueued_at,
+            compute_s=now - picked_at,
+        )
+        obs = self.engine.obs
+        obs.metrics.counter("served_total", service="stream").inc()
+        if p.trace_id is None:
+            return
+        obs.emit(
+            "stream.append",
+            t_start_s=p.enqueued_at,
+            duration_s=now - p.enqueued_at,
+            trace_id=p.trace_id,
+            span_id=p.root_span_id,
+            n_chars=len(p.classes),
+        )
+        obs.emit(
+            "stream.append_queue_wait",
+            t_start_s=p.enqueued_at,
+            duration_s=picked_at - p.enqueued_at,
+            trace_id=p.trace_id,
+            parent_id=p.root_span_id,
+            bucket=bucket,
+        )
+        obs.emit(
+            "stream.append_compute",
+            t_start_s=picked_at,
+            duration_s=now - picked_at,
+            trace_id=p.trace_id,
+            parent_id=p.root_span_id,
+            bucket=bucket,
+            batch_size=batch_size,
+        )
 
     # ---------------------------------------------------------------- serving
 
@@ -261,28 +333,35 @@ class StreamService:
 
         # One (B_pad, k) reach across sessions: chunk axis = session axis.
         pieces: List[np.ndarray] = []
-        finished: List[Optional[float]] = []
+        finished: List[Optional[_PendingAppend]] = []
+        picked_at = time.perf_counter()
         for s in batch:
-            piece, done_at = self._take_piece(s, self._next_piece_len(s))
+            piece, done = self._take_piece(s, self._next_piece_len(s))
             pieces.append(piece)
-            finished.append(done_at)
+            finished.append(done)
         B_pad = _next_pow2(len(batch))
         grid = np.full((B_pad, bucket), self.engine.tables.pad_class, dtype=np.int32)
         for row, piece in enumerate(pieces):
             grid[row, : len(piece)] = piece
         products = self.engine.phases.reach(self.engine.tables.N, jnp.asarray(grid))
 
-        now = time.perf_counter()
         stats = self._buckets.setdefault(bucket, BucketStats())
         for row, s in enumerate(batch):
             s.parser.absorb_product(pieces[row], products[row])
             s.last_touch = self._tick()
             if s.pending:
                 s.arrival_seq = self._tick()   # requeue behind current arrivals
-            if finished[row] is not None:
-                stats.record(now - finished[row])
+        now = time.perf_counter()
+        for done in finished:
+            if done is not None:
+                self._finish_append(
+                    done, bucket, picked_at, now, batch_size=len(batch)
+                )
         stats.batches += 1
         self.batches_run += 1
+        m = self.engine.obs.metrics
+        m.counter("batches_total", service="stream").inc()
+        m.gauge("queue_depth", service="stream").set(self.pending_appends)
         self._maybe_evict()
         return True
 
@@ -295,13 +374,17 @@ class StreamService:
         """Absorb ONE session's pending appends (unbatched reach per piece) —
         a query's latency must not scale with other sessions' backlogs."""
         while s.pending:
-            piece, done_at = self._take_piece(s, self._next_piece_len(s))
+            picked_at = time.perf_counter()
+            piece, done = self._take_piece(s, self._next_piece_len(s))
             bucket = s.parser._bucket_len(len(piece))
             s.parser.absorb_product(piece, s.parser._reach_piece(piece))
-            if done_at is not None:
-                self._buckets.setdefault(bucket, BucketStats()).record(
-                    time.perf_counter() - done_at
+            if done is not None:
+                self._finish_append(
+                    done, bucket, picked_at, time.perf_counter(), batch_size=1
                 )
+        self.engine.obs.metrics.gauge("queue_depth", service="stream").set(
+            self.pending_appends
+        )
 
     # ----------------------------------------------------------------- query
 
@@ -339,9 +422,11 @@ class StreamService:
         back to whole-cache LRU drops (frees tail products and join entries
         too).  The most recently touched session is never evicted.
         """
+        m = self.engine.obs.metrics
         if self.cache_budget_bytes is None:
             return
         total = self.bytes_cached       # summed once; decremented per evict
+        m.gauge("stream_bytes_cached").set(total)
         if total <= self.cache_budget_bytes:
             return
         by_lru = sorted(self._sessions.values(), key=lambda s: s.last_touch)
@@ -354,19 +439,27 @@ class StreamService:
         candidates.sort(key=lambda cand: cand[:3])
         for _, _, idx, nbytes, s in candidates:
             if total <= self.cache_budget_bytes:
+                m.gauge("stream_bytes_cached").set(total)
                 return
             s.parser.drop_sealed_product(idx)
             total -= nbytes
-            self.evictions += 1
+            self._count_eviction(nbytes)
         for s in victims:                # fallback: whole-cache LRU drops
             if total <= self.cache_budget_bytes:
-                return
+                break
             freed = s.parser.cache_nbytes
             if freed == 0:
                 continue
             s.parser.drop_cache()
             total -= freed
-            self.evictions += 1
+            self._count_eviction(freed)
+        m.gauge("stream_bytes_cached").set(total)
+
+    def _count_eviction(self, freed_bytes: int) -> None:
+        self.evictions += 1
+        m = self.engine.obs.metrics
+        m.counter("stream_evictions_total").inc()
+        m.counter("stream_bytes_reclaimed_total").inc(freed_bytes)
 
     # ------------------------------------------------------------------ stats
 

@@ -1,0 +1,326 @@
+"""Observability layer (repro/obs): tracer, metrics registry, exporters.
+
+Covers the acceptance bars of the observability PR:
+  * span mechanics — contextvars parenting, retroactive ``emit`` against a
+    pre-minted root id, disabled-tracer no-ops, the bounded ring buffer;
+  * ``validate_span_tree`` structural guarantees (one root, parents resolve,
+    child durations bounded) and its failure modes;
+  * ``MetricsRegistry`` — the METRIC_CATALOG rot guard (unknown name is a
+    ``KeyError`` at creation time), counter monotonicity, labeled series,
+    Prometheus rendering;
+  * the shared BENCH_*.json perf-trajectory schema;
+  * facade integration — a traced ``Parser.parse`` leaves a complete span
+    tree in the JSONL log, a trace ID survives the submit → ticket.result()
+    round trip, ``Parser.stats()`` is a live registry view, and the hlo
+    static cost attaches per compiled bucket;
+  * the split queue-wait / compute latency windows wrap independently at
+    ``LATENCY_WINDOW`` samples (regression: one window used to conflate
+    wait with compute).
+"""
+
+import json
+
+import pytest
+
+import repro
+from repro.obs import (
+    METRIC_CATALOG,
+    MetricsRegistry,
+    ObsConfig,
+    Tracer,
+    prometheus_text,
+    read_spans_jsonl,
+    validate_bench_report,
+    validate_metric_names,
+    validate_span_dict,
+    validate_span_tree,
+    write_bench_json,
+)
+from repro.serve.parse_service import LATENCY_WINDOW, BucketStats
+
+PATTERN = "(a|b|ab)+"
+
+
+# ------------------------------------------------------------------ tracer
+
+
+def test_span_nesting_parents_via_context():
+    tr = Tracer(enabled=True)
+    tid = tr.new_trace_id()
+    with tr.span("parse.request", trace_id=tid) as root:
+        with tr.span("phase.reach") as child:
+            pass
+    spans = tr.drain()
+    assert [s.name for s in spans] == ["phase.reach", "parse.request"]
+    reach, req = spans
+    assert reach.trace_id == tid          # inherited from the open parent
+    assert reach.parent_id == req.span_id
+    assert req.parent_id is None
+    assert req.duration_s >= reach.duration_s >= 0.0
+
+
+def test_emit_accepts_preminted_root_id():
+    # the service pattern: children are written mid-flight against a root id
+    # minted at submit; the root span itself lands only at collection
+    tr = Tracer(enabled=True)
+    tid = tr.new_trace_id()
+    root_id = tr._new_span_id()
+    tr.emit("parse.queue_wait", t_start_s=1.0, duration_s=0.5,
+            trace_id=tid, parent_id=root_id)
+    tr.emit("parse.request", t_start_s=1.0, duration_s=2.0,
+            trace_id=tid, span_id=root_id)
+    dicts = [s.to_dict() for s in tr.drain()]
+    for d in dicts:
+        validate_span_dict(d)
+    tree = validate_span_tree(dicts, tid)
+    assert tree["root"]["span_id"] == root_id
+    assert [c["name"] for c in tree["children"]] == ["parse.queue_wait"]
+
+
+def test_disabled_tracer_records_nothing():
+    tr = Tracer(enabled=False)
+    assert tr.new_trace_id() is None
+    with tr.span("parse.request") as sp:
+        sp.set_attr("ignored", 1)         # NullSpan: attribute sink
+    assert tr.emit("x", t_start_s=0.0, duration_s=0.0) is None
+    assert tr.drain() == []
+
+
+def test_ring_buffer_bounded():
+    tr = Tracer(enabled=True, max_spans=4)
+    for i in range(10):
+        tr.emit(f"s{i}", t_start_s=float(i), duration_s=0.0)
+    names = [s.name for s in tr.drain()]
+    assert names == ["s6", "s7", "s8", "s9"]
+
+
+def test_validate_span_tree_failure_modes():
+    def span(name, sid, parent=None):
+        return {"name": name, "trace_id": "t", "span_id": sid,
+                "parent_id": parent, "t_start_s": 0.0, "duration_s": 1.0,
+                "attrs": {}}
+
+    with pytest.raises(ValueError, match="no spans"):
+        validate_span_tree([], "t")
+    with pytest.raises(ValueError, match="2 roots"):
+        validate_span_tree([span("a", "1"), span("b", "2")], "t")
+    with pytest.raises(ValueError, match="not in trace"):
+        validate_span_tree([span("a", "1"), span("b", "2", parent="missing")],
+                           "t")
+    # direct children summing past the root wall-clock is a broken tree
+    bad = [span("root", "1"),
+           span("c1", "2", parent="1"), span("c2", "3", parent="1")]
+    with pytest.raises(ValueError, match="exceed root"):
+        validate_span_tree(bad, "t")
+
+
+# ----------------------------------------------------------------- metrics
+
+
+def test_unknown_metric_name_is_keyerror():
+    reg = MetricsRegistry()
+    with pytest.raises(KeyError, match="unknown metric"):
+        reg.counter("requests_totl")      # typo must fail loudly
+    with pytest.raises(KeyError):
+        reg.gauge("no_such_gauge")
+    with pytest.raises(KeyError):
+        reg.histogram("no_such_histogram")
+
+
+def test_counter_monotonic_and_labeled_series():
+    reg = MetricsRegistry()
+    a = reg.counter("requests_total", service="parse")
+    b = reg.counter("requests_total", service="stream")
+    a.inc()
+    a.inc(2)
+    b.inc()
+    assert a.value == 3 and b.value == 1  # distinct labeled series
+    assert reg.counter("requests_total", service="parse") is a
+    validate_metric_names(reg.snapshot())
+    text = prometheus_text(reg.snapshot())
+    assert 'repro_requests_total{service="parse"} 3.0' in text
+    assert 'repro_requests_total{service="stream"} 1.0' in text
+
+
+def test_validate_metric_names_rejects_unknown():
+    with pytest.raises(KeyError):
+        validate_metric_names(["requests_total", "made_up_metric"])
+    validate_metric_names(METRIC_CATALOG)  # the catalog validates itself
+
+
+# ------------------------------------------------------------ BENCH schema
+
+
+def test_bench_json_roundtrip(tmp_path):
+    out = write_bench_json(
+        "unit", config={"quick": True}, metrics={"rows": [{"v": 1}]},
+        out_dir=tmp_path, timestamp=123.0,
+    )
+    assert out.name == "BENCH_unit.json"
+    d = json.loads(out.read_text())
+    validate_bench_report(d)
+    assert d["name"] == "unit" and d["timestamp"] == 123.0
+    assert d["metrics"]["rows"] == [{"v": 1}]
+
+
+def test_bench_schema_violations(tmp_path):
+    good = {"name": "x", "timestamp": 1.0, "config": {}, "metrics": {}}
+    validate_bench_report(good)
+    for break_it in (
+        lambda d: d.pop("metrics"),
+        lambda d: d.update(extra=1),
+        lambda d: d.update(name=""),
+        lambda d: d.update(timestamp=0),
+        lambda d: d.update(config=[]),
+    ):
+        d = dict(good)
+        break_it(d)
+        with pytest.raises(ValueError):
+            validate_bench_report(d)
+    with pytest.raises(TypeError):        # must be JSON round-trippable
+        write_bench_json("bad", config={}, metrics={"x": object()},
+                         out_dir=tmp_path)
+
+
+# ------------------------------------------------- facade integration
+
+
+@pytest.fixture()
+def traced_parser(tmp_path):
+    log = tmp_path / "spans.jsonl"
+    p = repro.Parser(repro.ParserConfig(
+        regex=PATTERN, n_chunks=4,
+        obs={"enabled": True, "span_log": str(log)},
+    ))
+    yield p, log
+    p.close()
+
+
+def test_traced_parse_emits_complete_span_tree(traced_parser):
+    p, log = traced_parser
+    r = p.parse("abab" * 8)
+    assert r.ok and r.trace_id is not None
+    spans = read_spans_jsonl(log)
+    for d in spans:
+        validate_span_dict(d)
+    tree = validate_span_tree(spans, r.trace_id)
+    assert tree["root"]["name"] == "parse.request"
+    child_names = {c["name"] for c in tree["children"]}
+    assert {"phase.reach", "phase.join", "phase.build_merge",
+            "phase.host_build"} <= child_names
+
+
+def test_trace_id_survives_submit_roundtrip(traced_parser):
+    p, log = traced_parser
+    ticket = p.submit("abab" * 4)
+    r = ticket.result()
+    assert r.ok and r.trace_id is not None
+    tree = validate_span_tree(read_spans_jsonl(log), r.trace_id)
+    assert tree["root"]["name"] == "parse.request"
+    names = {c["name"] for c in tree["children"]}
+    assert {"parse.queue_wait", "parse.batch_compute"} <= names
+
+
+def test_traced_route_bit_identical_to_fused(traced_parser):
+    import numpy as np
+
+    p, _ = traced_parser
+    plain = repro.Parser(repro.ParserConfig(regex=PATTERN, n_chunks=4))
+    text = "ab" * 37
+    assert np.array_equal(p.parse(text).forest.pack(),
+                          plain.parse(text).forest.pack())
+    plain.close()
+
+
+def test_stream_appends_form_span_trees(traced_parser):
+    p, log = traced_parser
+    with p.open_stream() as stream:
+        stream.append("abab")
+        stream.append("ab" * 10)
+        assert stream.accepted
+    spans = read_spans_jsonl(log)
+    roots = [s for s in spans if s["name"] == "stream.append"]
+    assert len(roots) == 2
+    for root in roots:
+        tree = validate_span_tree(spans, root["trace_id"])
+        names = {c["name"] for c in tree["children"]}
+        assert {"stream.append_queue_wait", "stream.append_compute"} <= names
+
+
+def test_stats_is_live_registry_view(traced_parser):
+    p, _ = traced_parser
+
+    def served():
+        snap = p.stats()["metrics"]
+        return sum(s["value"] for s in snap.get("requests_total", []))
+
+    p.parse("abab")
+    first = served()
+    p.parse("abab")
+    p.submit("abab").result()
+    second = served()
+    assert second == first + 2            # counters only ever move up
+    validate_metric_names(p.stats()["metrics"])
+
+
+def test_stats_attaches_hlo_static_cost(traced_parser):
+    p, _ = traced_parser
+    p.parse("abab" * 8)
+    hlo = p.stats()["hlo"]
+    assert hlo, "traced parser with hlo=True must report static cost"
+    for bucket, phases in hlo.items():
+        assert set(phases) == {"reach", "join", "build_merge", "total"}
+        assert phases["total"]["flops"] > 0
+        assert phases["total"]["bytes"] > 0
+
+
+def test_hlo_off_by_config(tmp_path):
+    p = repro.Parser(repro.ParserConfig(
+        regex=PATTERN, n_chunks=4,
+        obs=ObsConfig(enabled=True, hlo=False),
+    ))
+    p.parse("abab")
+    assert p.stats()["hlo"] is None
+    p.close()
+
+
+# ------------------------------------------- latency window split
+
+
+def test_bucket_stats_windows_wrap_independently():
+    s = BucketStats()
+    # 100 fast-queue samples, then LATENCY_WINDOW + 100 slow-queue samples:
+    # once wrapped, the window must contain ONLY the recent regime
+    for _ in range(100):
+        s.record(0.2, queue_s=0.0, compute_s=0.2)
+    for _ in range(LATENCY_WINDOW + 100):
+        s.record(1.5, queue_s=1.0, compute_s=0.5)
+    assert len(s.window) == LATENCY_WINDOW
+    assert len(s.queue_window) == LATENCY_WINDOW
+    assert len(s.compute_window) == LATENCY_WINDOW
+    d = s.as_dict()
+    assert d["p50_queue_s"] == d["p99_queue_s"] == 1.0
+    assert d["p50_compute_s"] == d["p99_compute_s"] == 0.5
+    assert d["p50_latency_s"] == d["p99_latency_s"] == 1.5
+    # lifetime aggregates still see every sample
+    assert d["served"] == LATENCY_WINDOW + 200
+    assert d["max_latency_s"] == 1.5
+
+
+def test_bucket_stats_single_positional_record():
+    # pre-split call sites record latency only; the split windows stay empty
+    s = BucketStats()
+    s.record(5.0)
+    d = s.as_dict()
+    assert d["p99_latency_s"] == 5.0
+    assert d["p50_queue_s"] == 0.0 and d["p50_compute_s"] == 0.0
+
+
+def test_window_quantile_nearest_rank():
+    # nearest-rank: a 2-sample window's p99 is its slowest OBSERVED sample,
+    # not an interpolated value just below it (the admission predictor must
+    # not under-report)
+    s = BucketStats()
+    s.record(0.1)
+    s.record(0.5)
+    assert s.latency_quantile_s(99.0) == 0.5
