@@ -25,6 +25,11 @@ machine.  Mapping to the paper:
                             ℓ=257: bit-identity gate + strictly-fewer
                             product-path bytes on REs whose feasible width
                             < ℓp/2; writes BENCH_speculation.json
+  multi_tenant_throughput — ParserFleet: T=32 mixed regexes served by ONE
+                            tenant-batched device program vs a per-tenant
+                            serial Parser loop: bit-identity gate + ≥4×
+                            throughput + compile count O(#buckets);
+                            writes BENCH_multi_tenant.json
   recognizer      Fig. 16r — recognition cost (reach+join only)
   memory          App. C   — SLPF bytes/char, packed and compressed
   engine_roofline §Roofline— per-cell terms (from the dry-run JSON)
@@ -548,6 +553,130 @@ def bench_speculation_throughput(rows, quick, smoke=False):
     return report
 
 
+def bench_multi_tenant_throughput(rows, quick, smoke=False):
+    """Multi-tenant fleet: tenant-batched device programs vs per-tenant loop.
+
+    T=32 tenants over 8 distinct patterns of the e(k) family (ℓ = 2k+7 for
+    k = 1..8 — mixed true ℓ, one shared (Ab, ℓp) automaton bucket), each
+    with its own text.  Two routes, both warm:
+
+      serial   one solo ``Parser`` per tenant, 32 separate device dispatches
+               per sweep — the pre-fleet deployment model;
+      fleet    ``ParserFleet.parse_batch`` — ONE tenant-batched device
+               program serves all 32 (tenant axis vmapped like the batch
+               axis; ``core/fleet.py``).
+
+    Gates (the CI smoke invocation runs all of them):
+      * every fleet result bit-identical to its tenant's solo oracle;
+      * fleet throughput ≥ 4× the serial loop at T=32 (CPU/interpret);
+      * fleet compile count O(#buckets): ≤ 2 programs per automaton bucket
+        (NOT per tenant), and table-cache misses = #distinct patterns.
+
+    Returns the structured report written under ``metrics["report"]`` of
+    ``BENCH_multi_tenant.json`` — the perf-trajectory entry
+    ``scripts/bench_trend.py`` tracks.
+    """
+    from repro.api import Parser, ParserConfig, ParserFleet
+    from repro.core.fleet import clear_table_cache
+
+    T = 32
+    # short texts are the regime this feature exists for (thousands of
+    # small per-tenant requests, per-dispatch overhead dominant); modes
+    # scale timing repetitions, not text length
+    n = 16
+    reps = 3 if quick else 5   # best-of; smoke keeps 3 (timing noise guard)
+    patterns = [f"(a|b)*a(a|b){{{k}}}" for k in range(1, 9)]
+    configs = {
+        f"t{i:02d}": ParserConfig(regex=patterns[i % len(patterns)], n_chunks=2)
+        for i in range(T)
+    }
+    rng = np.random.default_rng(42)
+    texts = {
+        tid: bytes(rng.choice([97, 98], size=n - (i % 5)).astype(np.uint8))
+        for i, tid in enumerate(configs)
+    }
+    items = [(tid, texts[tid]) for tid in configs]
+
+    clear_table_cache()                        # deterministic cache counters
+    fleet = ParserFleet(configs, max_batch=T)
+    solos = {tid: Parser(cfg) for tid, cfg in configs.items()}
+
+    # bit-identity gate: the tenant-batched route vs each tenant's oracle
+    got = fleet.parse_batch(items)             # also warms the fleet program
+    oracle = {tid: solos[tid].parse(texts[tid]) for tid in configs}  # + warms
+    ok = all(
+        np.array_equal(r.forest.pack(), oracle[tid].forest.pack())
+        for (tid, _), r in zip(items, got)
+    )
+    rows.append(("multi_tenant.bit_identical", T, int(ok),
+                 "fleet == per-tenant solo SLPF (must be 1)"))
+    if not ok:
+        raise SystemExit(
+            "multi_tenant_throughput: fleet diverged from per-tenant oracles"
+        )
+
+    def serial_sweep():
+        for tid in configs:
+            solos[tid].parse(texts[tid])
+
+    dt_serial = _time(serial_sweep, reps=reps)
+    dt_fleet = _time(lambda: fleet.parse_batch(items), reps=reps)
+    thr_serial = T / max(dt_serial, 1e-9)
+    thr_fleet = T / max(dt_fleet, 1e-9)
+    speedup = dt_serial / max(dt_fleet, 1e-9)
+    rows.append(("multi_tenant.serial_throughput", T,
+                 round(thr_serial, 1), f"texts/s n~{n} (32 dispatches/sweep)"))
+    rows.append(("multi_tenant.fleet_throughput", T,
+                 round(thr_fleet, 1),
+                 f"texts/s n~{n} (tenant-batched, 1 dispatch/sweep)"))
+    rows.append(("multi_tenant.speedup", T, round(speedup, 2),
+                 "fleet vs per-tenant serial loop (gate ≥4x at T=32)"))
+    if speedup < 4.0:
+        raise SystemExit(
+            f"multi_tenant_throughput: fleet speedup {speedup:.2f}x < 4x "
+            f"at T={T}"
+        )
+
+    # compile economy gates: programs per BUCKET, table builds per PATTERN
+    n_buckets = fleet.engine.n_buckets
+    compiles = fleet.compile_count
+    rows.append(("multi_tenant.buckets", T, n_buckets,
+                 f"automaton buckets for {T} tenants"))
+    rows.append(("multi_tenant.compile_count", T, compiles,
+                 "device programs (gate: ≤ 2 per bucket, not per tenant)"))
+    if compiles > 2 * n_buckets:
+        raise SystemExit(
+            f"multi_tenant_throughput: {compiles} compiled programs for "
+            f"{n_buckets} buckets — compile count is not O(#buckets)"
+        )
+    snap = {str(k): v for k, v in fleet.obs.metrics.snapshot().items()}
+    misses = snap.get("table_cache_misses_total", [{"value": 0}])[0]["value"]
+    hits = snap.get("table_cache_hits_total", [{"value": 0}])[0]["value"]
+    rows.append(("multi_tenant.table_cache", T,
+                 f"miss={int(misses)} hit={int(hits)}",
+                 f"builds = {len(patterns)} distinct patterns (gate)"))
+    if int(misses) != len(patterns):
+        raise SystemExit(
+            f"multi_tenant_throughput: {int(misses)} table builds for "
+            f"{len(patterns)} distinct patterns"
+        )
+
+    return {
+        "tenants": T,
+        "n_chars": n,
+        "distinct_patterns": len(patterns),
+        "bit_identical": bool(ok),
+        "buckets": n_buckets,
+        "compile_count": int(compiles),
+        "table_cache": {"misses": int(misses), "hits": int(hits)},
+        "throughput": {
+            "serial": {"sweep_s": dt_serial, "texts_per_s": thr_serial},
+            "fleet": {"sweep_s": dt_fleet, "texts_per_s": thr_fleet},
+            "speedup_fleet_over_serial": speedup,
+        },
+    }
+
+
 def bench_recognizer(rows, quick):
     from benchmarks.benchmark_res import BIGDATA_RE, make_text_exact
     from repro.core.reference import ParallelArtifacts
@@ -637,6 +766,9 @@ def main(argv=None) -> None:
         "speculation_throughput": lambda: bench_speculation_throughput(
             rows, args.quick, args.smoke
         ),
+        "multi_tenant_throughput": lambda: bench_multi_tenant_throughput(
+            rows, args.quick, args.smoke
+        ),
         "recognizer": lambda: bench_recognizer(rows, args.quick),
         "memory": lambda: bench_memory(rows, args.quick),
         "engine_roofline": lambda: bench_engine_roofline(rows),
@@ -669,7 +801,10 @@ def main(argv=None) -> None:
         }
         if extra is not None:
             metrics["report"] = extra
-        bench_name = "speculation" if name == "speculation_throughput" else name
+        bench_name = {
+            "speculation_throughput": "speculation",
+            "multi_tenant_throughput": "multi_tenant",
+        }.get(name, name)
         out = write_bench_json(bench_name, config=config, metrics=metrics,
                                out_dir=repo_root)
         print(f"# wrote {out.name}", file=sys.stderr)

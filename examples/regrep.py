@@ -1,12 +1,16 @@
 """regrep — the paper's proof-of-concept query utility (Sect. 1).
 
-    PYTHONPATH=src python examples/regrep.py '<pattern>' <file> [--group N]
+    PYTHONPATH=src python examples/regrep.py -e '<pattern>' [-e ...] <file>
     PYTHONPATH=src python examples/regrep.py --demo
 
-Parses the WHOLE file against the RE with the public ``repro.Parser`` API
-and extracts group matches from the ``ParseResult`` — no false positives
-from free-text regions, unlike a grep for the delimiter (the paper's e-mail
-example).
+Parses the WHOLE file against each RE and extracts group matches from the
+``ParseResult`` — no false positives from free-text regions, unlike a grep
+for the delimiter (the paper's e-mail example).
+
+Multiple ``-e`` patterns run as tenants of ONE ``repro.ParserFleet``:
+patterns whose padded automata share a (backend, ℓp) bucket are served by a
+single tenant-batched device program, so querying a file with a stack of REs
+costs one compile per bucket — not one per pattern.
 """
 
 import argparse
@@ -18,41 +22,81 @@ sys.path.insert(0, str(Path(__file__).parents[1] / "src"))
 import repro
 
 
-DEMO_RE = r"(F:(a|b)+;T:((a|b)+,)+C:(a|b|;|,)*\.)+"
 DEMO_TEXT = b"F:ab;T:a,ba,C:ab;,b.F:b;T:ab,C:."
+DEMO_PATTERNS = [
+    # the paper's e-mail example: the full multi-record query
+    r"(F:(a|b)+;T:((a|b)+,)+C:(a|b|;|,)*\.)+",
+    # a single-record query: does NOT match the two-record demo text
+    r"F:(a|b)+;T:((a|b)+,)+C:(a|b|;|,)*\.",
+    # an unambiguous catch-all over the demo alphabet: always matches
+    r"(F|T|C|a|b|;|,|:|\.)*",
+]
 
 
-def regrep(pattern: str, data: bytes, group: int | None, n_chunks: int = 8) -> int:
-    parser = repro.Parser(repro.ParserConfig(regex=pattern, n_chunks=n_chunks))
-    result = parser.parse(data)
-    if not result.ok:
-        print("text does not match the RE", file=sys.stderr)
-        return 1
-    groups = parser.groups
-    targets = [group] if group is not None else groups
-    print(f"# {result.count_trees()} parse tree(s); groups: {groups}")
-    for g in targets:
-        for a, b in result.matches(g):
-            print(f"group {g} [{a}:{b}] {data[a:b].decode(errors='replace')!r}")
-    return 0
+def regrep(
+    patterns: list[str], data: bytes, group: int | None, n_chunks: int = 8
+) -> int:
+    with repro.ParserFleet(
+        {
+            f"p{i}": repro.ParserConfig(regex=pat, n_chunks=n_chunks)
+            for i, pat in enumerate(patterns)
+        }
+    ) as fleet:
+        results = fleet.parse_batch(
+            [(f"p{i}", data) for i in range(len(patterns))]
+        )
+        st = fleet.stats()["fleet"]
+        print(
+            f"# fleet: {st['n_tenants']} pattern(s) -> "
+            f"{st['n_buckets']} automaton bucket(s), "
+            f"{fleet.compile_count} compiled program(s)"
+        )
+        any_ok = False
+        for i, (pat, result) in enumerate(zip(patterns, results)):
+            if not result.ok:
+                print(f"[p{i}] {pat!r}: text does not match")
+                continue
+            any_ok = True
+            groups = fleet.groups_of(f"p{i}")
+            targets = [group] if group is not None else groups
+            print(
+                f"[p{i}] {pat!r}: {result.count_trees()} parse tree(s); "
+                f"groups: {groups}"
+            )
+            for g in targets:
+                for a, b in result.matches(g):
+                    print(
+                        f"  group {g} [{a}:{b}] "
+                        f"{data[a:b].decode(errors='replace')!r}"
+                    )
+    return 0 if any_ok else 1
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("pattern", nargs="?")
+    ap.add_argument("pattern", nargs="?",
+                    help="single query RE (or use -e, repeatable)")
     ap.add_argument("file", nargs="?")
+    ap.add_argument("-e", "--regexp", action="append", default=[],
+                    help="add a query pattern (fleet tenant); repeatable")
     ap.add_argument("--group", type=int, default=None)
     ap.add_argument("--chunks", type=int, default=8)
     ap.add_argument("--demo", action="store_true")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI run (implies --demo)")
     args = ap.parse_args()
-    if args.demo or args.smoke or args.pattern is None:
-        print(f"demo: pattern={DEMO_RE!r}")
-        print(f"      text   ={DEMO_TEXT!r}")
-        sys.exit(regrep(DEMO_RE, DEMO_TEXT, None, args.chunks))
+    patterns = list(args.regexp)
+    if args.pattern is not None:
+        # with -e present the positional slot is actually the file
+        if patterns and args.file is None:
+            args.file = args.pattern
+        else:
+            patterns.insert(0, args.pattern)
+    if args.demo or args.smoke or not patterns:
+        print(f"demo: text = {DEMO_TEXT!r}")
+        sys.exit(regrep(DEMO_PATTERNS, DEMO_TEXT, None, args.chunks))
     data = Path(args.file).read_bytes()
-    sys.exit(regrep(args.pattern, data, args.group, args.chunks))
+    sys.exit(regrep(patterns, data, args.group, args.chunks))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,118 @@
+#!/usr/bin/env python
+"""Perf-trajectory guard: fresh BENCH_<gate>.json vs the committed copy.
+
+The benchmark harness (``benchmarks/run.py``) writes one ``BENCH_<gate>.json``
+per gate, and the files are committed — so ``git show HEAD:<file>`` is the
+performance record of the last landed change.  This script re-reads the fresh
+working-tree copies after a CI bench run and compares every *throughput* row
+(higher is better) against the committed baseline:
+
+  * rows are matched by ``name``; a row counts as throughput-like when its
+    name contains ``throughput`` or its derived note mentions ``texts/s`` /
+    ``chars/s`` — ratio metrics (``speedup``) and pass/fail flags
+    (``bit_identical``) are excluded;
+  * a fresh value below ``--threshold`` (default 0.75, i.e. a >25% drop) of
+    the baseline is a regression — all regressions are reported, then the
+    script exits non-zero so CI fails;
+  * a file whose recorded ``config`` differs from the baseline's (full vs
+    smoke sizes, different ``--only``) is skipped: those numbers are not
+    comparable.
+
+Usage:  python scripts/bench_trend.py [--base HEAD] [--threshold 0.75]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+
+def _throughput_rows(doc: dict) -> dict:
+    """name → float value for every throughput-like row of one BENCH doc."""
+    out = {}
+    for row in doc.get("metrics", {}).get("rows", []):
+        name = str(row.get("name", ""))
+        derived = str(row.get("derived", ""))
+        if "speedup" in name or "bit_identical" in name:
+            continue
+        if "throughput" not in name and not any(
+            tag in derived for tag in ("texts/s", "chars/s")
+        ):
+            continue
+        try:
+            out[name] = float(row.get("value"))
+        except (TypeError, ValueError):
+            continue
+    return out
+
+
+def _committed(path: Path, base: str) -> dict | None:
+    proc = subprocess.run(
+        ["git", "show", f"{base}:{path.name}"],
+        cwd=REPO_ROOT,
+        capture_output=True,
+        text=True,
+    )
+    if proc.returncode != 0:  # new file this change: no baseline yet
+        return None
+    try:
+        return json.loads(proc.stdout)
+    except json.JSONDecodeError:
+        return None
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--base", default="HEAD",
+                    help="git ref holding the baseline BENCH files")
+    ap.add_argument("--threshold", type=float, default=0.75,
+                    help="fresh/baseline ratio below this fails (0.75 = "
+                         "fail on a >25%% throughput drop)")
+    args = ap.parse_args(argv)
+
+    regressions = []
+    compared = 0
+    for path in sorted(REPO_ROOT.glob("BENCH_*.json")):
+        base_doc = _committed(path, args.base)
+        if base_doc is None:
+            print(f"{path.name}: no committed baseline at {args.base} — skip")
+            continue
+        fresh_doc = json.loads(path.read_text())
+        if fresh_doc.get("config") != base_doc.get("config"):
+            print(f"{path.name}: config changed "
+                  f"({base_doc.get('config')} -> {fresh_doc.get('config')}) "
+                  f"— not comparable, skip")
+            continue
+        base_rows = _throughput_rows(base_doc)
+        fresh_rows = _throughput_rows(fresh_doc)
+        for name, base_v in sorted(base_rows.items()):
+            fresh_v = fresh_rows.get(name)
+            if fresh_v is None or base_v <= 0:
+                continue
+            ratio = fresh_v / base_v
+            compared += 1
+            marker = "REGRESSION" if ratio < args.threshold else "ok"
+            print(f"{path.name}: {name}  {base_v:.1f} -> {fresh_v:.1f}  "
+                  f"({ratio:.2f}x)  {marker}")
+            if ratio < args.threshold:
+                regressions.append((path.name, name, base_v, fresh_v, ratio))
+
+    if regressions:
+        print(f"\n{len(regressions)} throughput regression(s) worse than "
+              f"{(1 - args.threshold) * 100:.0f}%:", file=sys.stderr)
+        for fname, name, base_v, fresh_v, ratio in regressions:
+            print(f"  {fname}: {name} {base_v:.1f} -> {fresh_v:.1f} "
+                  f"({ratio:.2f}x)", file=sys.stderr)
+        return 1
+    print(f"\nbench trend clean: {compared} throughput metrics within "
+          f"{(1 - args.threshold) * 100:.0f}% of {args.base}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

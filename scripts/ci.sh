@@ -46,6 +46,12 @@ python -m benchmarks.run --only packed_throughput --smoke
 # BENCH_speculation.json (the machine-readable perf trajectory)
 python -m benchmarks.run --only speculation_throughput --smoke
 
+# multi-tenant fleet smoke gate: T=32 mixed regexes served by one
+# tenant-batched device program — bit-identical to each tenant's solo
+# Parser, ≥4× the per-tenant serial loop, compile count O(#buckets);
+# refreshes BENCH_multi_tenant.json
+python -m benchmarks.run --only multi_tenant_throughput --smoke
+
 # distributed runtime gate on an 8-device host mesh: the mesh tests run
 # in-process (device count is locked at jax init, hence the fresh
 # interpreters), then the sharded bench's bit-identity smoke
@@ -76,6 +82,12 @@ python -m benchmarks.run --quick --only tab5
 # observability smoke gate: traced parses on every registered backend leave
 # schema-valid span trees in the JSONL log (direct + ticket routes), metric
 # names stay inside METRIC_CATALOG, the Prometheus rendering is non-empty,
-# and every BENCH_*.json the gates above refreshed matches the shared
+# fleet compile counts scale with buckets (not tenants), and every
+# BENCH_*.json the gates above refreshed matches the shared
 # {name, timestamp, config, metrics} perf-trajectory schema
 python scripts/obs_smoke.py
+
+# perf-trajectory trend gate: the BENCH_*.json files the gates above
+# regenerated vs the copies committed at HEAD — a >25% drop in any
+# throughput metric (at matching bench config) fails CI
+python scripts/bench_trend.py

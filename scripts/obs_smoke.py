@@ -15,7 +15,12 @@ Four checks, all through the public facade (``repro.Parser`` with
   3. metric-name rot guard — every name in every registry snapshot is in
      ``METRIC_CATALOG`` (``validate_metric_names``), and ``prometheus_text``
      renders the snapshot;
-  4. every ``BENCH_*.json`` at the repo root parses against the shared
+  4. fleet compile economy — a ``ParserFleet`` with many tenants over few
+     (backend, ℓp-bucket) pairs compiles one program per BUCKET (not per
+     tenant), and the table-compile cache counters
+     (``table_cache_hits_total`` / ``table_cache_misses_total``) count
+     distinct (pattern, backend) builds and render in the snapshot;
+  5. every ``BENCH_*.json`` at the repo root parses against the shared
      perf-trajectory schema (``validate_bench_report``).
 
 Exits non-zero on the first violated invariant, printing which one.
@@ -81,6 +86,47 @@ def check_backend(backend: str, workdir: Path) -> None:
     print(f"ok: {backend:7s} — {len(spans)} spans, both routes form valid trees")
 
 
+def check_fleet() -> None:
+    from repro.core.fleet import clear_table_cache
+
+    clear_table_cache()
+    # 8 tenants, but only 3 (backend, class, ℓp) automaton buckets:
+    # six jnp tenants share one pattern/bucket, one jnp tenant has a long
+    # pattern (own ℓp bucket), one runs the shared pattern on sparse
+    tenants = {
+        f"t{i}": repro.ParserConfig(regex="(a|b)*abb", n_chunks=4)
+        for i in range(6)
+    }
+    tenants["long"] = repro.ParserConfig(regex="a" * 40, n_chunks=4)
+    tenants["sp"] = repro.ParserConfig(
+        regex="(a|b)*abb", backend="sparse", n_chunks=4
+    )
+    with repro.ParserFleet(tenants) as fleet:
+        fleet.parse_batch([(tid, "ababb") for tid in tenants])
+        n_buckets = fleet.engine.n_buckets
+        assert n_buckets == 3, f"fleet: expected 3 buckets, got {n_buckets}"
+        assert fleet.compile_count == n_buckets, (
+            f"fleet: {fleet.compile_count} compiled programs for "
+            f"{n_buckets} buckets and {len(tenants)} tenants — compile "
+            f"count must scale with buckets, not tenants"
+        )
+        snap = fleet.stats()["metrics"]
+        validate_metric_names(snap)
+        flat = {str(k): v for k, v in snap.items()}
+        misses = flat["table_cache_misses_total"][0]["value"]
+        hits = flat["table_cache_hits_total"][0]["value"]
+        # 3 distinct (pattern, backend) builds; the 5 repeat jnp tenants hit
+        assert misses == 3, f"fleet: {misses} table builds, expected 3"
+        assert hits == 5, f"fleet: {hits} table-cache hits, expected 5"
+        assert flat["fleet_tenants"][0]["value"] == len(tenants)
+        assert flat["fleet_buckets"][0]["value"] == n_buckets
+        rendered = prometheus_text(snap)
+        for name in ("table_cache_misses_total", "table_cache_hits_total"):
+            assert name in rendered, f"fleet: {name} missing from rendering"
+    print(f"ok: fleet   — {len(tenants)} tenants -> {n_buckets} buckets, "
+          f"{int(misses)} table builds (+{int(hits)} cache hits)")
+
+
 def check_bench_reports(repo_root: Path) -> None:
     reports = sorted(repo_root.glob("BENCH_*.json"))
     assert reports, "no BENCH_*.json at repo root (run benchmarks/run.py)"
@@ -97,6 +143,7 @@ def main() -> None:
     with tempfile.TemporaryDirectory() as tmp:
         for backend in repro.list_backends():
             check_backend(backend, Path(tmp))
+    check_fleet()
     check_bench_reports(repo_root)
     print("obs smoke gate: all checks passed")
 

@@ -25,6 +25,7 @@ from typing import TYPE_CHECKING
 _EXPORTS = {
     # facade (repro/api.py)
     "Parser": ("repro.api", "Parser"),
+    "ParserFleet": ("repro.api", "ParserFleet"),
     "ParserConfig": ("repro.api", "ParserConfig"),
     "SLOTargets": ("repro.api", "SLOTargets"),
     "ObsConfig": ("repro.obs", "ObsConfig"),
@@ -53,6 +54,7 @@ if TYPE_CHECKING:  # static importers see the real types
         ParseTicket,
         Parser,
         ParserConfig,
+        ParserFleet,
         ParserStream,
         SLOTargets,
     )

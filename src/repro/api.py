@@ -129,6 +129,9 @@ class ParserConfig:
     # batched serving
     max_batch: int = 8
     max_pending: Optional[int] = None
+    # weighted-fair share when this config serves as a fleet tenant (or for
+    # this parser's streams): scheduling vtime advances by chars/weight
+    weight: float = 1.0
     # streaming seal/bucket policy (pow2 geometric sealing)
     first_seal_len: int = 8
     max_seal_len: Optional[int] = None
@@ -185,6 +188,8 @@ class ParserConfig:
             )
         if self.max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
+        if self.weight <= 0:
+            raise ValueError(f"weight must be > 0, got {self.weight}")
         for name in ("max_pending", "cache_budget_bytes", "max_pending_chars"):
             v = getattr(self, name)
             if v is not None and v < 1:
@@ -440,6 +445,7 @@ class ParseTicket:
             bucket=req.bucket,
             latency_s=req.latency_s,
             trace_id=req.trace_id,
+            tenant=req.tenant,
         )
         return self._result
 
@@ -676,6 +682,8 @@ class Parser:
         bucket: Optional[Tuple[int, int]] = None,
         latency_s: Optional[float] = None,
         trace_id: Optional[str] = None,
+        tenant: Optional[str] = None,  # ticket plumbing; one-automaton
+                                       # parsers have nothing per-tenant
     ) -> ParseResult:
         return ParseResult(
             forest=slpf,
@@ -698,6 +706,9 @@ class Parser:
                 n_chunks=c.n_chunks,
                 max_pending=c.max_pending,
             )
+            # the facade's traffic is one tenant; its weight only matters
+            # when sharing a queue (tests / embedders may add more)
+            self._parse_service.register_tenant("default", weight=c.weight)
         return self._parse_service
 
     @property
@@ -807,10 +818,16 @@ class Parser:
             raise
         return [t.result() for t in tickets]
 
-    def open_stream(self) -> ParserStream:
+    def open_stream(self, *, weight: Optional[float] = None) -> ParserStream:
         """Open a streaming session (incremental appends over the shared
-        prefix-cache service); close it with ``.close()`` / ``with``."""
-        return ParserStream(self, self.stream_service, self.stream_service.open())
+        prefix-cache service); close it with ``.close()`` / ``with``.
+
+        ``weight`` sets the session's weighted-fair share of the service's
+        batched absorption (default: the config's ``weight``)."""
+        w = self.config.weight if weight is None else weight
+        return ParserStream(
+            self, self.stream_service, self.stream_service.open(weight=w)
+        )
 
     def count_accepting(self, text) -> int:
         return self.parse(text).count_trees()
@@ -905,6 +922,257 @@ class Parser:
         self.close()
 
 
+# -------------------------------------------------------------------- fleet
+
+
+class ParserFleet:
+    """Many regexes, one engine pool: the multi-tenant facade.
+
+        fleet = repro.ParserFleet({
+            "errors":  "ERROR: .*",
+            "api":     ParserConfig(regex="GET /[a-z]+", weight=2.0),
+        })
+        fleet.parse("errors", line).ok
+        fleet.parse_batch([("errors", l1), ("api", l2), ...])
+
+    Each tenant is a ``ParserConfig`` (or pattern string / config dict) —
+    the same declarative surface as ``Parser`` — but instead of one engine
+    per config, every tenant's transition tables are padded into a shared
+    pow2 automaton bucket (``core/fleet.py``) and served by ONE
+    tenant-batched device program per bucket: compile count and launch
+    overhead scale with the number of (backend, ℓp-bucket) pairs, not
+    tenants, while every result stays bit-identical to that tenant's solo
+    ``Parser``.  Table builds go through a process-wide compile cache keyed
+    on (normalized regex, backend, ℓp-bucket) — fleets, or re-added
+    tenants, sharing a pattern never recompile it.
+
+    Serving is the weighted-fair scheduler (``FleetParseService``): each
+    tenant's ``ParserConfig.weight`` is its fair share, ``max_pending`` its
+    private queue budget, ``slo`` its own grading targets in ``stats()``.
+    """
+
+    def __init__(
+        self,
+        tenants: Optional[Mapping[str, Union[ParserConfig, str, Mapping[str, Any]]]] = None,
+        *,
+        max_batch: int = 32,
+        max_pending: Optional[int] = None,
+        obs: Union[ObsConfig, Mapping[str, Any], None] = None,
+    ):
+        from .core.fleet import FleetEngine
+        from .serve.parse_service import FleetParseService
+
+        if obs is not None and isinstance(obs, Mapping):
+            obs = ObsConfig(**dict(obs))
+        self.obs = ObsHandle.from_config(obs)
+        self.engine = FleetEngine(obs=self.obs)
+        self._service = FleetParseService._internal(
+            self.engine, max_batch=max_batch, max_pending=max_pending
+        )
+        self._configs: Dict[str, ParserConfig] = {}
+        for name, cfg in (tenants or {}).items():
+            self.add(name, cfg)
+
+    # ---------------------------------------------------------------- tenants
+
+    def add(
+        self,
+        name: str,
+        config: Union[ParserConfig, str, Mapping[str, Any]],
+        *,
+        matrices: Optional[ParserMatrices] = None,
+    ) -> "ParserFleet":
+        """Register a tenant (chainable).  ``matrices`` bypasses the regex
+        compile path for pre-built tables (``Parser.from_matrices`` analog)."""
+        from .core.fleet import TenantSpec
+
+        if isinstance(config, str):
+            config = ParserConfig(regex=config)
+        elif isinstance(config, Mapping):
+            config = ParserConfig.from_dict(config)
+        if not isinstance(config, ParserConfig):
+            raise TypeError(
+                f"fleet tenant config must be a ParserConfig, pattern string, "
+                f"or config dict; got {type(config).__name__}"
+            )
+        if config.mesh is not None:
+            raise ValueError(
+                "fleet tenants run on the shared single-device engine pool; "
+                "mesh configs are not supported (use a dedicated Parser)"
+            )
+        spec = TenantSpec(
+            regex=config.regex,
+            backend=config.backend,
+            kernel=config.kernel,
+            feasible_depth=config.feasible_depth,
+            n_chunks=config.n_chunks,
+            min_chunk_len=config.min_chunk_len,
+            weight=config.weight,
+            max_pending=config.max_pending,
+        )
+        self._service.add_tenant(name, spec, matrices=matrices)
+        self._configs[name] = config
+        return self
+
+    @property
+    def tenants(self) -> Dict[str, ParserConfig]:
+        return dict(self._configs)
+
+    def config_of(self, tenant: str) -> ParserConfig:
+        try:
+            return self._configs[tenant]
+        except KeyError:
+            raise KeyError(f"unknown fleet tenant {tenant!r}") from None
+
+    def groups_of(self, tenant: str) -> List[int]:
+        """Numbered group ids of one tenant's pattern (``Parser.groups``
+        analog), usable with ``ParseResult.matches``."""
+        from .core.numbering import OPEN, OP_GROUP
+
+        table = self.engine.tenant(tenant).tables.matrices.table
+        return sorted(
+            {
+                s.num
+                for s in table.numbered.symbols
+                if s.kind == OPEN and s.op == OP_GROUP
+            }
+        )
+
+    # ------------------------------------------------------------------ parse
+
+    def _default_deadline_s(self, tenant: str) -> Optional[float]:
+        slo = self.config_of(tenant).slo
+        return slo.default_deadline_s if slo is not None else None
+
+    def submit(
+        self, tenant: str, text, *, deadline_s: Optional[float] = None
+    ) -> ParseTicket:
+        """Deadline-aware asynchronous submission for one tenant — the same
+        admission contract as ``Parser.submit`` plus the tenant's own
+        ``max_pending`` budget (``BudgetExceeded``)."""
+        if deadline_s is None:
+            deadline_s = self._default_deadline_s(tenant)
+        req = self._service.submit_request(
+            text, deadline_s=deadline_s, tenant=tenant
+        )
+        return ParseTicket(self, self._service, req, deadline_s=deadline_s)
+
+    def parse(
+        self, tenant: str, text, *, deadline_s: Optional[float] = None
+    ) -> ParseResult:
+        """Parse one text under one tenant's automaton (sync)."""
+        return self.submit(tenant, text, deadline_s=deadline_s).result()
+
+    def parse_batch(
+        self,
+        items: Sequence[Tuple[str, Any]],
+        *,
+        deadline_s: Optional[float] = None,
+    ) -> List[ParseResult]:
+        """Parse ``[(tenant, text), ...]``; results in input order.
+
+        Same-bucket requests — across tenants — share one tenant-batched
+        device program per step.  Admission is all-or-nothing, as in
+        ``Parser.parse_batch``.
+        """
+        tickets: List[ParseTicket] = []
+        try:
+            for tenant, text in items:
+                tickets.append(self.submit(tenant, text, deadline_s=deadline_s))
+        except Exception:
+            for ticket in tickets:
+                ticket.cancel()
+            raise
+        return [t.result() for t in tickets]
+
+    def _wrap(
+        self,
+        slpf: SLPF,
+        *,
+        bucket=None,
+        latency_s: Optional[float] = None,
+        trace_id: Optional[str] = None,
+        tenant: Optional[str] = None,
+    ) -> ParseResult:
+        cfg = self._configs.get(tenant) if tenant is not None else None
+        return ParseResult(
+            forest=slpf,
+            backend=cfg.backend if cfg is not None else "fleet",
+            bucket=bucket,
+            latency_s=latency_s,
+            n_chunks=cfg.n_chunks if cfg is not None else None,
+            speculation=None,
+            trace_id=trace_id,
+        )
+
+    # ------------------------------------------------------------------ stats
+
+    @property
+    def compile_count(self) -> int:
+        """Device programs compiled fleet-wide — O(#buckets × shapes),
+        independent of the tenant count."""
+        return self.engine.compile_count
+
+    def stats(self) -> Dict[str, Any]:
+        """The fleet-wide serving view.
+
+        ``tenants`` carries each tenant's weighted-fair and latency state
+        plus an SLO grade against ITS config targets; ``fleet`` reports the
+        bucket economy (tenants per automaton bucket, compile count,
+        process-wide table-cache state) — the number that should stay flat
+        as tenants multiply.
+        """
+        from .core.fleet import table_cache_stats
+
+        s = self._service.stats
+        tenants: Dict[str, Any] = {}
+        for name, d in s["tenants"].items():
+            cfg = self._configs.get(name)
+            grade: Dict[str, Any] = {
+                "p50_s": d["p50_latency_s"],
+                "p99_s": d["p99_latency_s"],
+            }
+            slo = cfg.slo if cfg is not None else None
+            if slo is not None and slo.p50_s is not None:
+                grade["p50_ok"] = d["p50_latency_s"] <= slo.p50_s
+            if slo is not None and slo.p99_s is not None:
+                grade["p99_ok"] = d["p99_latency_s"] <= slo.p99_s
+            tenants[name] = {
+                **d,
+                "backend": cfg.backend if cfg is not None else None,
+                "slo": grade,
+            }
+        return {
+            "backend": "fleet",
+            "pending": s["pending"],
+            "peak_queue_depth": s["peak_queue_depth"],
+            "batches_run": s["batches_run"],
+            "compile_count": self.compile_count,
+            "buckets": s["buckets"],
+            "tenants": tenants,
+            "fleet": {
+                "n_tenants": len(self._configs),
+                "n_buckets": self.engine.n_buckets,
+                "bucket_sizes": {
+                    "|".join(map(str, k)): v
+                    for k, v in sorted(self.engine.bucket_sizes().items())
+                },
+                "table_cache": table_cache_stats(),
+            },
+            "metrics": self.obs.metrics.snapshot(),
+        }
+
+    def close(self) -> None:
+        """Flush observability sinks (the JSONL span log, if configured)."""
+        self.obs.close()
+
+    def __enter__(self) -> "ParserFleet":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
 __all__ = [
     "AdmissionError",
     "BudgetExceeded",
@@ -915,6 +1183,7 @@ __all__ = [
     "Parser",
     "ParserBackend",
     "ParserConfig",
+    "ParserFleet",
     "ParserStream",
     "SLOTargets",
     "SLPF",

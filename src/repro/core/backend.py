@@ -550,11 +550,24 @@ class SparseBackend(PackedBackend):
         # outgoing transition on a = the depth-1 feasible width upper bound
         widths = N[:-1].any(axis=1).sum(axis=1).astype(np.int64)
         w_static = int(widths.max()) if widths.size else 1
-        S = _next_pow2(max(self.min_width, w_static, 1))
+        self.class_widths = widths
+        self.bind_shape(lp, w_static)
+
+    def bind_shape(self, ell_pad: int, raw_width: int) -> None:
+        """Bind static product shapes from an ℓp and a raw feasible-width bound.
+
+        The fleet path calls this directly: one SparseBackend instance serves
+        every tenant of an (Ab, ℓp) automaton bucket, bound at the bucket's
+        worst-case width (max over member tenants) — a width ≥ any member's
+        own bound keeps every gather correct, the extra slots just carry
+        ``SPARSE_EMPTY``.  Applies the same pow2 bucketing + dense-fallback
+        rule as ``bind_tables``.
+        """
+        lp = int(ell_pad)
+        S = _next_pow2(max(self.min_width, int(raw_width), 1))
         # dense-fallback rule: no reduction to be had → carry every row
         self._width = lp if S >= lp else S
         self._ell_pad = lp
-        self.class_widths = widths
 
     def _require_bound(self, lp: int) -> int:
         if self._width is None:

@@ -73,6 +73,61 @@ def build_matrices(table: SegmentTable) -> ParserMatrices:
     )
 
 
+def pad_matrices_bundle(
+    m: ParserMatrices, *, ell_pad: int, n_classes: int
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Pad one automaton's (N, I, F) to a shared fleet-bucket table shape.
+
+    Returns float32 ``N (n_classes, ell_pad, ell_pad)``, ``I (ell_pad,)``,
+    ``F (ell_pad,)`` — the multi-tenant generalization of
+    ``EngineTables.from_matrices``'s lane padding, so automata of different
+    sizes stack on a leading tenant axis and share ONE compiled program:
+
+      * state axes zero-pad ℓ → ell_pad: padded states have no incoming or
+        outgoing arcs and I/F zero there, so they are unreachable — products
+        and entry vectors restricted to the first ℓ rows are bit-identical
+        to the unpadded automaton's;
+      * the tenant's real classes keep indices 0..A-1 (``byte_to_class`` is
+        unchanged); every index from A through n_classes-1 — the relocated
+        PAD class (now uniformly ``n_classes - 1`` across the bucket) and
+        any unused padding classes below it — is the identity over the
+        padded space, a semantic no-op in any chunk position.
+
+    Padding is semantics-free for every backend: dense/packed consume the
+    f32 layout directly (packing happens in-jit), and the sparse feasible
+    width of an identity class is its diagonal — bounded by the bucket's
+    shared width bucket S, which the fleet binds to the member maximum.
+    """
+    ell = m.n_segments
+    A1 = m.N.shape[0]                       # tenant classes incl. its PAD
+    if ell_pad < ell:
+        raise ValueError(f"ell_pad {ell_pad} < automaton segments {ell}")
+    if n_classes < A1:
+        raise ValueError(f"n_classes {n_classes} < automaton classes {A1}")
+    N = np.zeros((n_classes, ell_pad, ell_pad), dtype=np.float32)
+    N[: A1 - 1, :ell, :ell] = m.N[:-1].astype(np.float32)
+    N[A1 - 1 :] = np.eye(ell_pad, dtype=np.float32)  # PAD + unused = identity
+    I = np.zeros(ell_pad, dtype=np.float32)
+    I[:ell] = m.I
+    F = np.zeros(ell_pad, dtype=np.float32)
+    F[:ell] = m.F
+    return N, I, F
+
+
+def feasible_width_bound(m: ParserMatrices) -> int:
+    """Worst-case single-character feasible-start width of one automaton.
+
+    max over REAL classes (PAD and identity padding excluded — their
+    "width" is ℓ by construction and would force the dense fallback) of
+    nnz-cols(N[a]): the depth-1 bound every deeper feasible set respects.
+    This is the host-side quantity the fleet maxes over an ℓp-bucket's
+    members to pick the bucket's shared sparse width S.
+    """
+    N = np.asarray(m.N[:-1]) > 0
+    widths = N.any(axis=1).sum(axis=1)
+    return int(widths.max()) if widths.size else 1
+
+
 def pack_bits(mat: np.ndarray, axis: int = -1) -> np.ndarray:
     """Pack a boolean array along ``axis`` into uint32 words (little-endian bits)."""
     mat = np.moveaxis(np.asarray(mat, dtype=bool), axis, -1)
@@ -86,11 +141,19 @@ def pack_bits(mat: np.ndarray, axis: int = -1) -> np.ndarray:
     return np.moveaxis(packed, -1, axis if axis >= 0 else len(packed.shape) + axis)
 
 
+_BIT_SHIFTS = np.arange(32, dtype=np.uint32)
+
+
 def unpack_bits(packed: np.ndarray, n: int, axis: int = -1) -> np.ndarray:
     """Inverse of :func:`pack_bits`."""
-    packed = np.moveaxis(np.asarray(packed, dtype=np.uint32), axis, -1)
-    bits = (packed[..., :, None] >> np.arange(32, dtype=np.uint32)) & np.uint32(1)
+    packed = np.asarray(packed, dtype=np.uint32)
+    last = axis == -1 or axis == packed.ndim - 1
+    if not last:
+        packed = np.moveaxis(packed, axis, -1)
+    bits = (packed[..., :, None] >> _BIT_SHIFTS) & np.uint32(1)
     flat = bits.reshape(packed.shape[:-1] + (-1,))[..., :n].astype(bool)
+    if last:
+        return flat
     return np.moveaxis(flat, -1, axis if axis >= 0 else len(flat.shape) + axis)
 
 

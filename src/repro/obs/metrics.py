@@ -52,12 +52,21 @@ METRIC_CATALOG: Dict[str, Tuple] = {
     "peak_queue_depth": ("gauge", "high-water queue depth"),
     # admission / SLO
     "admission_rejects_total": (
-        "counter", "admission rejections by cause (deadline|budget)",
+        "counter", "admission rejections by cause (deadline|budget|tenant_budget)",
     ),
     # engine program cache
     "compiled_programs_total": ("counter", "device programs traced (re-jit events)"),
     "bucket_cache_hits_total": ("counter", "parses served by an already-compiled bucket"),
     "bucket_cache_misses_total": ("counter", "parses that compiled a new bucket shape"),
+    # fleet transition-table compile cache (core/fleet.py)
+    "table_cache_hits_total": (
+        "counter", "tenant table compiles served from the process-wide cache",
+    ),
+    "table_cache_misses_total": (
+        "counter", "tenant table compiles that built matrices from the regex",
+    ),
+    "fleet_tenants": ("gauge", "tenants registered on a FleetEngine"),
+    "fleet_buckets": ("gauge", "distinct (backend, class, ℓp) automaton buckets"),
     # streaming cache
     "stream_sessions": ("gauge", "open streaming sessions"),
     "stream_bytes_cached": ("gauge", "device bytes resident in prefix caches"),

@@ -11,11 +11,14 @@ join a batch.
               ``ParserEngine`` — every session reuses the same compiled
               phase programs.
   batching    queued appends are split into seal-bounded pieces; ``step``
-              picks the piece bucket of the *oldest* active session (FIFO)
-              and runs ONE batched reach for every same-bucket session's
-              next piece (chunk axis = session axis; pad rows are all-PAD →
-              identity products, discarded).  Each product then folds into
-              its session's tail with one ``compose``.
+              picks the piece bucket of the least-virtual-time active
+              session (weighted-fair — ``vtime`` advances by absorbed
+              chars / the session's ``weight``, so one hot stream cannot
+              starve the rest; equal weights degrade to arrival-order
+              FIFO) and runs ONE batched reach for every same-bucket
+              session's next piece (chunk axis = session axis; pad rows
+              are all-PAD → identity products, discarded).  Each product
+              then folds into its session's tail with one ``compose``.
   eviction    a bytes-cached budget over all sessions' device caches; when
               exceeded, sealed chunk products are dropped cost-aware —
               LARGEST-chunk products first (every product frees the same
@@ -74,8 +77,10 @@ class StreamSession:
     sid: int
     parser: StreamingParser
     pending: Deque[_PendingAppend] = dataclasses.field(default_factory=deque)
-    arrival_seq: int = 0                 # FIFO key while active
+    arrival_seq: int = 0                 # tie-break key while active
     last_touch: int = 0                  # LRU key for eviction
+    weight: float = 1.0                  # weighted-fair share
+    vtime: float = 0.0                   # absorbed chars / weight
 
     @property
     def pending_chars(self) -> int:
@@ -125,6 +130,7 @@ class StreamService:
         self._sessions: Dict[int, StreamSession] = {}
         self._next_sid = 0
         self._seq = 0                    # global arrival / touch clock
+        self._vclock = 0.0               # vtime of the last scheduled session
         self.batches_run = 0
         self.evictions = 0
         self._peak_queue_depth = 0
@@ -132,8 +138,15 @@ class StreamService:
 
     # ------------------------------------------------------------- sessions
 
-    def open(self) -> int:
-        """Open a streaming session; returns its session id."""
+    def open(self, *, weight: float = 1.0) -> int:
+        """Open a streaming session; returns its session id.
+
+        ``weight`` is the session's weighted-fair share: its virtual time
+        advances by absorbed-chars/weight, so at equal backlog a weight-2
+        session is scheduled twice as often as a weight-1 one.
+        """
+        if weight <= 0:
+            raise ValueError(f"session weight must be > 0, got {weight}")
         sid = self._next_sid
         self._next_sid += 1
         self._sessions[sid] = StreamSession(
@@ -144,6 +157,8 @@ class StreamService:
                 max_seal_len=self.max_seal_len,
             ),
             last_touch=self._tick(),
+            weight=weight,
+            vtime=self._vclock,          # no credit for pre-open idle time
         )
         self.engine.obs.metrics.gauge("stream_sessions").set(len(self._sessions))
         return sid
@@ -225,6 +240,9 @@ class StreamService:
             self._buckets.setdefault(bucket, BucketStats())
             if not s.pending:
                 s.arrival_seq = self._tick()
+                # WFQ activation floor: a session waking from idle resumes
+                # at the scheduler's clock — idle time banks no credit
+                s.vtime = max(s.vtime, self._vclock)
             p = _PendingAppend(
                 classes=classes,
                 enqueued_at=time.perf_counter(),
@@ -312,10 +330,15 @@ class StreamService:
     # ---------------------------------------------------------------- serving
 
     def step(self) -> bool:
-        """Absorb one piece-batch (oldest session's bucket); False when idle.
+        """Absorb one piece-batch; False when idle.
 
-        One batched reach serves every selected session's next piece; the
-        per-session compose/seal bookkeeping is O(1) device work each.
+        The batch head is the least-virtual-time active session (weighted
+        fair; arrival order breaks ties, so equal weights are plain FIFO);
+        the rest of the batch fills with same-bucket sessions in arrival
+        order — riders share the head's reach program and each charges its
+        own vtime.  One batched reach serves every selected session's next
+        piece; the per-session compose/seal bookkeeping is O(1) device work
+        each.
         """
         active = sorted(
             (s for s in self._sessions.values() if s.pending),
@@ -323,13 +346,15 @@ class StreamService:
         )
         if not active:
             return False
-        bucket = self._piece_bucket(active[0])
-        batch: List[StreamSession] = []
+        head = min(active, key=lambda s: (s.vtime, s.arrival_seq))
+        self._vclock = head.vtime
+        bucket = self._piece_bucket(head)
+        batch: List[StreamSession] = [head]
         for s in active:
-            if self._piece_bucket(s) == bucket:
+            if len(batch) == self.max_batch:
+                break
+            if s is not head and self._piece_bucket(s) == bucket:
                 batch.append(s)
-                if len(batch) == self.max_batch:
-                    break
 
         # One (B_pad, k) reach across sessions: chunk axis = session axis.
         pieces: List[np.ndarray] = []
@@ -349,6 +374,7 @@ class StreamService:
         for row, s in enumerate(batch):
             s.parser.absorb_product(pieces[row], products[row])
             s.last_touch = self._tick()
+            s.vtime += len(pieces[row]) / s.weight
             if s.pending:
                 s.arrival_seq = self._tick()   # requeue behind current arrivals
         now = time.perf_counter()
@@ -378,6 +404,7 @@ class StreamService:
             piece, done = self._take_piece(s, self._next_piece_len(s))
             bucket = s.parser._bucket_len(len(piece))
             s.parser.absorb_product(piece, s.parser._reach_piece(piece))
+            s.vtime += len(piece) / s.weight   # out-of-band work still charges
             if done is not None:
                 self._finish_append(
                     done, bucket, picked_at, time.perf_counter(), batch_size=1

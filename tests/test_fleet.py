@@ -1,0 +1,254 @@
+"""Multi-tenant fleet conformance: heterogeneous tenants, one engine pool.
+
+Every tenant served through the fleet must be bit-identical to its own solo
+``Parser`` — across every registered backend, across tenants whose ℓp lands
+in the same or different automaton buckets, and including a dense-fallback
+sparse tenant sharing a bucket with a width-reduced one.  The economics are
+asserted too: compiled-program count scales with #buckets (not #tenants) and
+the process-wide table cache serves repeat patterns without rebuilding.
+
+Pattern zoo (jnp lane floor is 32, so ℓp buckets split at ℓ > 32):
+
+  RX_SMALL   (a|b)*abb        ℓ=9,  4 classes, feasible width 4 (reduced)
+  RX_MED     (a|b)×10         ℓ=21, 4 classes — same (Ab, ℓp)=(4, 32)
+                              bucket as RX_SMALL, different true ℓ
+  RX_LONG    a×40             ℓ=41, 4-class bucket at ℓp=64 — different
+                              bucket from both
+  RX_WIDE    a?×6             ℓ=28, width 21 → pow2 32 ≥ ℓp: the sparse
+                              dense-fallback tenant; same (4, 32) bucket
+                              as RX_SMALL on the sparse backend
+"""
+
+import numpy as np
+import pytest
+
+import repro
+from repro import Parser, ParserConfig, ParserFleet
+from repro.core.backend import list_backends
+from repro.core.fleet import (
+    FleetEngine,
+    TenantSpec,
+    clear_table_cache,
+    normalize_regex,
+)
+
+RX_SMALL = "(a|b)*abb"
+RX_MED = "(a|b)" * 10
+RX_LONG = "a" * 40
+RX_WIDE = "a?" * 6
+
+TEXTS = {
+    RX_SMALL: ["abb", "ababb", "bbabb", "a" * 7 + "bb"],
+    RX_MED: ["ab" * 5, "ba" * 5, "a" * 10],
+    RX_LONG: ["a" * 40],
+    RX_WIDE: ["", "a", "aaa", "aaaaaa"],
+}
+
+
+def _assert_identical(result, oracle):
+    assert np.array_equal(result.forest.classes, oracle.forest.classes)
+    assert np.array_equal(result.forest.columns, oracle.forest.columns)
+    assert result.ok == oracle.ok
+
+
+# ------------------------------------------------------------- conformance
+
+
+@pytest.mark.parametrize("backend", list_backends())
+def test_fleet_conformant_per_backend(backend):
+    """Each registered backend, as a fleet tenant, is bit-identical to its
+    solo Parser on every text."""
+    cfg = ParserConfig(regex=RX_SMALL, backend=backend, n_chunks=4)
+    fleet = ParserFleet({"t": cfg})
+    solo = Parser(cfg)
+    for text in TEXTS[RX_SMALL]:
+        _assert_identical(fleet.parse("t", text), solo.parse(text))
+
+
+def test_mixed_backend_tenants_one_batch():
+    """Tenants on different backends coexist; one parse_batch serves them
+    all, each against its own oracle."""
+    specs = {
+        "jnp": ParserConfig(regex=RX_SMALL, backend="jnp", n_chunks=4),
+        "packed": ParserConfig(regex=RX_SMALL, backend="packed", n_chunks=4),
+        "sparse": ParserConfig(regex=RX_SMALL, backend="sparse", n_chunks=4),
+    }
+    fleet = ParserFleet(specs)
+    solos = {k: Parser(c) for k, c in specs.items()}
+    items = [(k, t) for k in specs for t in TEXTS[RX_SMALL]]
+    results = fleet.parse_batch(items)
+    for (k, text), res in zip(items, results):
+        _assert_identical(res, solos[k].parse(text))
+
+
+def test_same_and_different_lp_buckets():
+    """Different true ℓ in one pow2 ℓp bucket, and a tenant that lands in
+    its own bucket — all bit-identical, compile count = #buckets touched."""
+    fleet = ParserFleet(
+        {
+            "small": ParserConfig(regex=RX_SMALL, n_chunks=4),
+            "med": ParserConfig(regex=RX_MED, n_chunks=4),
+            "long": ParserConfig(regex=RX_LONG, n_chunks=4),
+        }
+    )
+    eng = fleet.engine
+    assert eng.tenant("small").bucket_key == eng.tenant("med").bucket_key
+    assert eng.tenant("long").bucket_key != eng.tenant("small").bucket_key
+    assert eng.n_buckets == 2
+    for name, rx in [("small", RX_SMALL), ("med", RX_MED), ("long", RX_LONG)]:
+        solo = Parser(ParserConfig(regex=rx, n_chunks=4))
+        for text in TEXTS[rx]:
+            _assert_identical(fleet.parse(name, text), solo.parse(text))
+
+
+def test_sparse_dense_fallback_shares_bucket():
+    """A dense-fallback sparse tenant (feasible width ≥ ℓp) and a reduced
+    one share an automaton bucket: the bucket binds at the member-max width
+    (here the dense fallback S = ℓp) and both stay exact."""
+    fleet = ParserFleet(
+        {
+            "reduced": ParserConfig(regex=RX_SMALL, backend="sparse", n_chunks=4),
+            "dense": ParserConfig(regex=RX_WIDE, backend="sparse", n_chunks=4),
+        }
+    )
+    eng = fleet.engine
+    key = eng.tenant("reduced").bucket_key
+    assert key == eng.tenant("dense").bucket_key
+    runner = eng._buckets[key]
+    assert runner.backend._width == key[2]  # bucket-wide dense fallback
+    for name, rx in [("reduced", RX_SMALL), ("dense", RX_WIDE)]:
+        solo = Parser(ParserConfig(regex=rx, backend="sparse", n_chunks=4))
+        for text in TEXTS[rx]:
+            _assert_identical(fleet.parse(name, text), solo.parse(text))
+
+
+def test_sparse_bucket_width_grows_on_tenant_add():
+    """Adding a wider tenant to a sparse bucket re-binds the shared width
+    and re-jits; already-registered tenants stay bit-identical after."""
+    fleet = ParserFleet(
+        {"reduced": ParserConfig(regex=RX_SMALL, backend="sparse", n_chunks=4)}
+    )
+    runner = fleet.engine._buckets[fleet.engine.tenant("reduced").bucket_key]
+    narrow = runner.backend._width
+    solo = Parser(ParserConfig(regex=RX_SMALL, backend="sparse", n_chunks=4))
+    _assert_identical(fleet.parse("reduced", "ababb"), solo.parse("ababb"))
+    fleet.add("dense", ParserConfig(regex=RX_WIDE, backend="sparse", n_chunks=4))
+    assert runner.backend._width > narrow
+    for text in TEXTS[RX_SMALL]:
+        _assert_identical(fleet.parse("reduced", text), solo.parse(text))
+
+
+# ---------------------------------------------------------------- economics
+
+
+def test_compile_count_scales_with_buckets_not_tenants():
+    """12 same-bucket tenants, one text shape: ONE compiled program."""
+    fleet = ParserFleet(
+        {f"t{i}": ParserConfig(regex=RX_SMALL, n_chunks=4) for i in range(12)}
+    )
+    texts = [(f"t{i}", "ababb") for i in range(12)]
+    fleet.parse_batch(texts)
+    assert fleet.compile_count == 1
+    fleet.parse_batch(texts)  # steady state: still one program
+    assert fleet.compile_count == 1
+    assert fleet.engine.n_buckets == 1
+
+
+def test_table_cache_shared_across_fleets():
+    clear_table_cache()
+    patterns = {"a": RX_SMALL, "b": RX_MED}
+    f1 = ParserFleet({k: ParserConfig(regex=v, n_chunks=4) for k, v in patterns.items()})
+    snap1 = {
+        str(k): v for k, v in f1.obs.metrics.snapshot().items()
+    }
+    assert snap1["table_cache_misses_total"][0]["value"] == 2.0
+    assert "table_cache_hits_total" not in snap1
+    f2 = ParserFleet({k: ParserConfig(regex=v, n_chunks=4) for k, v in patterns.items()})
+    snap2 = {str(k): v for k, v in f2.obs.metrics.snapshot().items()}
+    assert snap2["table_cache_hits_total"][0]["value"] == 2.0
+    assert "table_cache_misses_total" not in snap2
+
+
+def test_normalize_regex_is_structural():
+    assert normalize_regex(RX_SMALL) == normalize_regex(RX_SMALL)
+    assert normalize_regex("ab") != normalize_regex("ba")
+    assert normalize_regex("(a)") != normalize_regex("a")  # groups number parens
+
+
+def test_table_cache_key_includes_backend():
+    clear_table_cache()
+    fleet = ParserFleet(
+        {
+            "j": ParserConfig(regex=RX_SMALL, backend="jnp"),
+            "s": ParserConfig(regex=RX_SMALL, backend="sparse"),
+        }
+    )
+    snap = {str(k): v for k, v in fleet.obs.metrics.snapshot().items()}
+    assert snap["table_cache_misses_total"][0]["value"] == 2.0
+
+
+# ------------------------------------------------------------------- facade
+
+
+def test_fleet_engine_rejects_duplicate_and_unknown_tenants():
+    eng = FleetEngine()
+    eng.add_tenant("t", TenantSpec(regex=RX_SMALL))
+    with pytest.raises(ValueError, match="already registered"):
+        eng.add_tenant("t", TenantSpec(regex=RX_SMALL))
+    with pytest.raises(KeyError, match="unknown fleet tenant"):
+        eng.tenant("ghost")
+
+
+def test_parser_fleet_rejects_mesh_and_unknown_tenant():
+    fleet = ParserFleet({"t": RX_SMALL})
+    with pytest.raises(ValueError, match="mesh"):
+        fleet.add("m", ParserConfig(regex=RX_SMALL, mesh="host"))
+    with pytest.raises(KeyError):
+        fleet.parse("ghost", "abb")
+
+
+def test_fleet_stats_shape_and_slo_grades():
+    fleet = ParserFleet(
+        {
+            "fast": ParserConfig(
+                regex=RX_SMALL,
+                n_chunks=4,
+                slo=repro.SLOTargets(p99_s=1e4),  # generously satisfied
+                weight=2.0,
+            ),
+            "plain": ParserConfig(regex=RX_MED, n_chunks=4),
+        }
+    )
+    fleet.parse_batch([("fast", "abb"), ("plain", "ab" * 5)])
+    s = fleet.stats()
+    assert s["backend"] == "fleet"
+    assert s["fleet"]["n_tenants"] == 2
+    assert s["fleet"]["n_buckets"] == 1  # same (jnp, 4, 32) bucket
+    fast = s["tenants"]["fast"]
+    assert fast["served"] == 1 and fast["weight"] == 2.0
+    assert fast["slo"]["p99_ok"] is True
+    assert "p99_ok" not in s["tenants"]["plain"]["slo"]  # no targets set
+    assert s["metrics"]  # registry snapshot present
+
+
+def test_fleet_tenant_budget_rejected_typed():
+    fleet = ParserFleet(
+        {"t": ParserConfig(regex=RX_SMALL, n_chunks=4, max_pending=2)}
+    )
+    fleet.submit("t", "abb")
+    fleet.submit("t", "abb")
+    with pytest.raises(repro.BudgetExceeded):
+        fleet.submit("t", "abb")
+
+
+def test_fleet_results_in_input_order_across_buckets():
+    fleet = ParserFleet(
+        {
+            "small": ParserConfig(regex=RX_SMALL, n_chunks=4),
+            "long": ParserConfig(regex=RX_LONG, n_chunks=4),
+        }
+    )
+    items = [("long", "a" * 40), ("small", "abb"), ("small", "bab"), ("long", "a" * 39)]
+    results = fleet.parse_batch(items)
+    assert [r.ok for r in results] == [True, True, False, False]
+    assert results[0].backend == "jnp" and results[0].n_chunks == 4

@@ -117,3 +117,123 @@ def test_service_accepts_prebuilt_engine(art):
     assert req.rid == rid and req.done
     ref = parse_serial_matrix(art.matrices, "abab")
     assert np.array_equal(req.slpf.columns, ref.columns)
+
+
+# ----------------------------------------------------- cancellation (flagged)
+
+
+def test_cancel_never_burns_slot_or_sample(art, monkeypatch):
+    """Regression: a cancelled request must not occupy a batch slot nor
+    record a latency sample — the scheduler purges flagged rows before
+    packing (previously a cancel racing batch selection could still ride)."""
+    svc = ParseService(art.matrices, max_batch=4, n_chunks=4)
+    reqs = [svc.submit_request("abab") for _ in range(3)]
+    rows_seen = []
+    orig = svc.engine.parse_batch
+
+    def spy(classes_list, n_chunks=None):
+        rows_seen.append(len(classes_list))
+        return orig(classes_list, n_chunks=n_chunks)
+
+    monkeypatch.setattr(svc.engine, "parse_batch", spy)
+    assert svc.cancel(reqs[1].rid) is True
+    assert svc.cancel(reqs[1].rid) is False      # idempotent
+    assert svc.pending == 2
+    assert svc.step() is True
+    assert rows_seen == [2]                      # the cancelled row never packed
+    assert reqs[0].done and reqs[2].done and not reqs[1].done
+    assert reqs[1].cancelled and reqs[1].latency_s is None
+    bucket = reqs[0].bucket
+    assert svc._buckets[bucket].served == 2      # no sample for the cancel
+    assert svc.cancel(reqs[0].rid) is False      # already served
+
+
+def test_cancel_lands_while_batch_in_flight(art, monkeypatch):
+    """The ISSUE scenario: a cancel arriving while ANOTHER bucket's batch is
+    executing on device — the flagged request must be skipped afterwards,
+    burning no slot and leaving no latency sample."""
+    svc = ParseService(art.matrices, max_batch=4, n_chunks=4)
+    short = svc.submit_request("abab")
+    long = svc.submit_request("ab" * 40)         # a different (c, k) bucket
+    assert short.bucket != long.bucket
+    orig = ParseService._execute
+
+    def execute_and_cancel(bucket, batch):
+        assert svc.cancel(long.rid) is True      # lands mid-flight
+        return orig(svc, bucket, batch)
+
+    monkeypatch.setattr(svc, "_execute", execute_and_cancel)
+    assert svc.step() is True                    # serves the short bucket
+    assert short.done and not long.done and long.cancelled
+    assert svc.batches_run == 1
+    assert svc.pending == 0
+    assert svc.step() is False                   # nothing live remains
+    assert not svc._queue                        # flagged residue purged
+    assert svc._buckets[long.bucket].served == 0
+
+
+# ------------------------------------------------------------- weighted-fair
+
+
+def test_weighted_fair_exact_serve_order(art):
+    """Two tenants, weight 1 vs 2, equal-length texts, max_batch=1: the WFQ
+    vtime order is deterministic — the weight-2 tenant is served twice as
+    often (name-ordered tie-break)."""
+    svc = ParseService(art.matrices, max_batch=1, n_chunks=4)
+    svc.register_tenant("a", weight=1.0)
+    svc.register_tenant("b", weight=2.0)
+    for _ in range(4):
+        svc.submit("abab", tenant="a")
+    for _ in range(4):
+        svc.submit("abab", tenant="b")
+    done = svc.run()
+    assert [r.tenant for r in done] == ["a", "b", "b", "a", "b", "b", "a", "a"]
+
+
+def test_weighted_fair_no_starvation(art):
+    """A hot tenant's backlog cannot starve a light tenant: the light
+    tenant's single request is served next step, not after the flood."""
+    svc = ParseService(art.matrices, max_batch=1, n_chunks=4)
+    svc.register_tenant("hot", weight=1.0)
+    svc.register_tenant("light", weight=1.0)
+    for _ in range(6):
+        svc.submit("abab", tenant="hot")
+    svc.step()                                   # hot advances its vtime
+    svc.submit("abab", tenant="light")
+    svc.step()
+    st = svc.stats
+    assert st["tenants"]["light"]["served"] == 1  # served immediately
+    assert st["tenants"]["hot"]["served"] == 1
+    assert st["tenants"]["hot"]["pending"] == 5
+
+
+def test_same_bucket_riders_fill_across_tenants(art):
+    """Batch head comes from the fair pick; same-bucket requests from other
+    tenants ride along in the same device batch (each charging itself)."""
+    svc = ParseService(art.matrices, max_batch=4, n_chunks=4)
+    svc.register_tenant("a", weight=1.0)
+    svc.register_tenant("b", weight=1.0)
+    svc.submit("abab", tenant="a")
+    svc.submit("baba", tenant="b")
+    svc.submit("abba", tenant="a")
+    assert svc.step() is True
+    assert svc.batches_run == 1                  # one batch served all three
+    st = svc.stats
+    assert st["tenants"]["a"]["served"] == 2
+    assert st["tenants"]["b"]["served"] == 1
+    assert st["tenants"]["b"]["vtime"] > 0.0     # riders charge themselves
+
+
+def test_tenant_budget_is_private(art):
+    from repro.errors import BudgetExceeded
+
+    svc = ParseService(art.matrices, max_batch=4, n_chunks=4)
+    svc.register_tenant("vip", weight=1.0, max_pending=1)
+    svc.submit("abab", tenant="vip")
+    with pytest.raises(BudgetExceeded, match="vip"):
+        svc.submit("abab", tenant="vip")
+    svc.submit("abab")                           # other tenants unaffected
+    st = svc.stats
+    assert st["tenants"]["vip"]["rejects"] == 1
+    done = svc.run()
+    assert len(done) == 2
