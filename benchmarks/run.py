@@ -14,6 +14,10 @@ machine.  Mapping to the paper:
   streaming_append        — amortized cost per appended byte of the
                             StreamingParser prefix cache vs a cold full
                             re-parse per append (``--smoke`` = CI-tiny sizes)
+  edit_splice             — mid-text splice cost of the product segment tree
+                            vs a linear cold re-parse: ~log(n) growth gate +
+                            ≥4× speedup at the largest prefix + bit-identity
+                            at every size; writes BENCH_edit_splice.json
   sharded_throughput      — distributed runtime: 1-device vs all-host-device
                             mesh at fixed batch (+ one long chunk-sharded
                             text); run under
@@ -276,6 +280,84 @@ def bench_streaming_append(rows, quick, smoke=False):
         raise SystemExit(
             "streaming_append: stream SLPF diverged from cold parse"
         )  # make the CI smoke invocation a real gate, not a printout
+
+
+def bench_edit_splice(rows, quick, smoke=False):
+    """Mid-text splice cost (the product segment tree) vs linear re-parse.
+
+    For geometrically growing prefix sizes n, times a fixed-width
+    ``ParserStream.edit`` (splice + acceptance query) at spread positions
+    and the cold re-parse an editor without the tree would pay.  Two gates:
+    the edit cost must grow ~log(n) — far below the x(n_hi/n_lo) a linear
+    re-join would show — and at the largest prefix the splice must beat the
+    cold re-parse >= 4x.  Same-bytes replacements keep the text constant, so
+    the edited stream's SLPF is byte-compared against the cold parse at
+    every size (a real gate, not a printout).
+    """
+    from benchmarks.benchmark_res import BIGDATA_RE, make_text_exact
+    from repro.api import Parser, ParserConfig
+
+    parser = Parser(ParserConfig(
+        regex=BIGDATA_RE, first_seal_len=32, max_seal_len=64
+    ))
+    sizes = [512, 2048, 8192] if quick else [2048, 8192, 32768]
+    span, reps = 8, 12
+    edit_t, speedup, t_cold = {}, {}, {}
+    for n in sizes:
+        text = make_text_exact("BIGDATA", n, seed=9)
+        stream = parser.open_stream()
+        stream.append(text)
+        stream.accepted                     # drain + warm the query path
+        for i in (0, 1):                    # warm the splice piece buckets
+            stream.edit(i, i + span, text[i : i + span])
+        ts = []
+        for i in range(reps):
+            lo = (i * 2654435761) % (n - span)   # deterministic spread
+            repl = text[lo : lo + span]          # same bytes: text invariant
+            t0 = time.perf_counter()
+            stream.edit(lo, lo + span, repl)
+            stream.accepted
+            ts.append(time.perf_counter() - t0)
+        edit_t[n] = sorted(ts)[len(ts) // 2]     # median: compile-spike-proof
+        parser.parse(text)                       # warm the cold bucket
+        t_cold[n] = _time(lambda: parser.parse(text), reps=2)
+        speedup[n] = t_cold[n] / max(edit_t[n], 1e-9)
+        rows.append((f"edit.us_per_edit.n{n}", n, round(edit_t[n] * 1e6, 1),
+                     f"{span}-char splice + acceptance query"))
+        rows.append((f"edit.reparse_speedup.n{n}", n, round(speedup[n], 1),
+                     f"cold reparse {t_cold[n]*1e3:.2f}ms vs "
+                     f"{edit_t[n]*1e6:.0f}us/edit"))
+        ok = np.array_equal(
+            stream.result().forest.pack(), parser.parse(text).forest.pack()
+        )
+        stream.close()
+        rows.append((f"edit.bit_identical.n{n}", n, int(ok),
+                     "edited stream SLPF == cold parse (must be 1)"))
+        if not ok:
+            raise SystemExit(
+                "edit_splice: edited stream SLPF diverged from cold parse"
+            )
+    n_lo, n_hi = sizes[0], sizes[-1]
+    growth = edit_t[n_hi] / max(edit_t[n_lo], 1e-9)
+    linear = n_hi / n_lo
+    rows.append(("edit.cost_growth", n_hi, round(growth, 2),
+                 f"splice cost x{growth:.1f} over a x{linear:.0f} prefix "
+                 f"(log-like; linear would be ~x{linear:.0f}, "
+                 f"gate <= x{linear / 2:.0f})"))
+    rows.append(("edit.edit_throughput", n_hi,
+                 round(1.0 / max(edit_t[n_hi], 1e-9), 1),
+                 f"edits/s at n={n_hi} ({span}-char splice + acceptance)"))
+    if growth > linear / 2:
+        raise SystemExit(
+            f"edit_splice: splice cost grew x{growth:.1f} over a "
+            f"x{linear:.0f} prefix — not O(log n) "
+            f"(gate <= x{linear / 2:.0f})"
+        )
+    if speedup[n_hi] < 4.0:
+        raise SystemExit(
+            f"edit_splice: splice only {speedup[n_hi]:.1f}x faster than cold "
+            f"re-parse at n={n_hi} (gate >= 4x)"
+        )
 
 
 def bench_sharded_throughput(rows, quick, smoke=False):
@@ -755,6 +837,9 @@ def main(argv=None) -> None:
         "speedup": lambda: bench_speedup(rows, args.quick),
         "batched_throughput": lambda: bench_batched_throughput(rows, args.quick),
         "streaming_append": lambda: bench_streaming_append(
+            rows, args.quick, args.smoke
+        ),
+        "edit_splice": lambda: bench_edit_splice(
             rows, args.quick, args.smoke
         ),
         "sharded_throughput": lambda: bench_sharded_throughput(

@@ -36,6 +36,12 @@ python -m pytest tests/test_conformance.py tests/test_packed.py \
 # streaming smoke gate: amortized append cost + bit-identity vs cold parse
 python -m benchmarks.run --only streaming_append --smoke
 
+# edit-splice smoke gate: mid-text splices through the product segment tree
+# must stay ~log(n) (cost-growth gate), beat a cold linear re-parse ≥4× at
+# the largest prefix, and land bit-identical to the cold parse at every
+# size; refreshes BENCH_edit_splice.json
+python -m benchmarks.run --only edit_splice --smoke
+
 # packed-backend smoke gate: bit-identity vs the jnp backend + the ≥8×
 # SLPF-path bytes-moved reduction at ℓ ≥ 256 states (real gate, not printout)
 python -m benchmarks.run --only packed_throughput --smoke

@@ -15,12 +15,16 @@ Four checks, all through the public facade (``repro.Parser`` with
   3. metric-name rot guard — every name in every registry snapshot is in
      ``METRIC_CATALOG`` (``validate_metric_names``), and ``prometheus_text``
      renders the snapshot;
-  4. fleet compile economy — a ``ParserFleet`` with many tenants over few
+  4. stream edits — mid-text splices through ``ParserStream.edit`` leave
+     ``stream.edit`` span trees and move the ``stream_edits_total`` counter
+     and ``stream_edit_recompose_depth`` histogram, all rendering in the
+     Prometheus text;
+  5. fleet compile economy — a ``ParserFleet`` with many tenants over few
      (backend, ℓp-bucket) pairs compiles one program per BUCKET (not per
      tenant), and the table-compile cache counters
      (``table_cache_hits_total`` / ``table_cache_misses_total``) count
      distinct (pattern, backend) builds and render in the snapshot;
-  5. every ``BENCH_*.json`` at the repo root parses against the shared
+  6. every ``BENCH_*.json`` at the repo root parses against the shared
      perf-trajectory schema (``validate_bench_report``).
 
 Exits non-zero on the first violated invariant, printing which one.
@@ -86,6 +90,44 @@ def check_backend(backend: str, workdir: Path) -> None:
     print(f"ok: {backend:7s} — {len(spans)} spans, both routes form valid trees")
 
 
+def check_stream_edit(workdir: Path) -> None:
+    log = workdir / "spans_edit.jsonl"
+    cfg = repro.ParserConfig(
+        regex="(a|b|ab)+", n_chunks=4, first_seal_len=4, max_seal_len=8,
+        obs={"enabled": True, "span_log": str(log)},
+    )
+    with repro.Parser(cfg) as p:
+        with p.open_stream() as stream:
+            stream.append("ab" * 12)
+            assert stream.accepted, "edit: stream rejected a valid prefix"
+            stream.edit(5, 9, "ba")           # mid-text splice
+            stream.delete(0, 2)               # pure delete
+            stream.insert(4, "ab")            # zero-width insert
+            assert stream.result().ok, "edit: edited stream rejected"
+        snap = p.stats()["metrics"]
+        validate_metric_names(snap)
+        flat = {str(k): v for k, v in snap.items()}
+        edits = flat["stream_edits_total"][0]["value"]
+        assert edits == 3, f"edit: stream_edits_total={edits}, expected 3"
+        depth = flat["stream_edit_recompose_depth"][0]["value"]
+        assert depth["count"] == 3, \
+            f"edit: recompose-depth histogram count={depth['count']}, expected 3"
+        rendered = prometheus_text(snap)
+        for name in ("stream_edits_total", "stream_edit_recompose_depth"):
+            assert name in rendered, f"edit: {name} missing from rendering"
+        p.obs.close()
+    spans = read_spans_jsonl(log)
+    roots = [s for s in spans if s["name"] == "stream.edit"]
+    assert len(roots) == 3, f"edit: {len(roots)} stream.edit spans, expected 3"
+    for root in roots:
+        assert root["parent_id"] is None, "edit: stream.edit span not a root"
+        for attr in ("lo", "hi", "repl_chars", "n_chars"):
+            assert attr in root["attrs"], f"edit: span missing attr {attr!r}"
+        assert root["duration_s"] >= 0.0, "edit: span never closed"
+    print(f"ok: edit    — 3 splices traced, recompose-depth histogram + "
+          f"counter rendered")
+
+
 def check_fleet() -> None:
     from repro.core.fleet import clear_table_cache
 
@@ -143,6 +185,7 @@ def main() -> None:
     with tempfile.TemporaryDirectory() as tmp:
         for backend in repro.list_backends():
             check_backend(backend, Path(tmp))
+        check_stream_edit(Path(tmp))
     check_fleet()
     check_bench_reports(repo_root)
     print("obs smoke gate: all checks passed")

@@ -496,6 +496,28 @@ class ParserStream:
         """Is the current prefix a valid text (drains this session only)?"""
         return self._service.accepted(self._sid)
 
+    def edit(self, lo: int, hi: int, replacement) -> int:
+        """Splice the prefix: replace characters ``[lo, hi)`` with
+        ``replacement``; returns the new prefix length.
+
+        O(log n) device work — the stream's product segment tree re-reaches
+        only the spliced chunks and re-composes one leaf-to-root path; the
+        result is bit-identical to a cold parse of the edited text.  Drains
+        this session's queued appends first (the range addresses the
+        post-append prefix).
+        """
+        return self._service.edit(self._sid, lo, hi, replacement)
+
+    def delete(self, lo: int, hi: int) -> int:
+        """Remove characters ``[lo, hi)`` — ``edit`` with an empty
+        replacement."""
+        return self._service.edit(self._sid, lo, hi, "")
+
+    def insert(self, pos: int, text) -> int:
+        """Insert ``text`` before position ``pos`` — a zero-width
+        ``edit``."""
+        return self._service.edit(self._sid, pos, pos, text)
+
     def result(self) -> ParseResult:
         """ParseResult of the full current prefix (drains this session)."""
         t0 = time.perf_counter()

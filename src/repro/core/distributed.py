@@ -35,8 +35,11 @@ by the streaming prefix cache:
      shard-local, emitting packed SLPF columns under the input sharding.
 
 Because step 2's payload is just "the stacked chunk products", anything that
-already holds such a stack plugs in directly: ``core/stream.py``'s sealed
-product cache is exactly this payload, so sharded streaming is
+already holds such a stack plugs in directly: ``core/stream.py``'s product
+segment tree flattens to exactly this payload — the in-order leaf frontier
+of the tree IS the sealed-product stack, before and after any ``edit``
+splice (internal nodes are memoized re-associations the collective never
+sees) — so sharded streaming, including post-edit queries, is
 ``join_products`` over a stack sharded on the chunk axes — no streaming-
 specific collective code.
 

@@ -72,7 +72,15 @@ METRIC_CATALOG: Dict[str, Tuple] = {
     "stream_bytes_cached": ("gauge", "device bytes resident in prefix caches"),
     "stream_evictions_total": ("counter", "sealed products / caches evicted"),
     "stream_bytes_reclaimed_total": ("counter", "device bytes freed by eviction"),
-    "stream_rebuilds_total": ("counter", "cold-cache reconstructions paid"),
+    "stream_rebuilds_total": (
+        "counter", "evicted chunk products re-reached (counted per chunk)",
+    ),
+    # streaming edits (product segment tree)
+    "stream_edits_total": ("counter", "mid-text splices served by streams"),
+    "stream_edit_recompose_depth": (
+        "histogram", "internal products re-composed per edit (tree spine depth)",
+        (0, 1, 2, 4, 8, 16, 32, 64),
+    ),
     # distribution
     "allgather_payload_bytes_total": (
         "counter", "product-stack bytes moved through the mesh all-gather",

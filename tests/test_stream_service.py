@@ -79,6 +79,33 @@ def test_eviction_by_bytes_budget_is_exact(art, engine):
     assert svc.stats["rebuilds"] > 0     # evicted sessions rebuilt on touch
 
 
+def test_eviction_converges_below_join_cache_size(art, engine):
+    """bugfix: cache_nbytes counts join-cache bytes — per-product eviction
+    must RELEASE them too (drop_sealed_product reports the true freed
+    bytes), so a budget smaller than the join cache converges by per-node
+    drops alone instead of spinning over budget into whole-cache drops."""
+    svc = StreamService(engine, max_batch=4, first_seal_len=4)
+    a, b = svc.open(), svc.open()
+    for sid in (a, b):
+        svc.append(sid, "ab" * 14)        # 28 chars → sealed exactly 4+8+16
+        svc.slpf(sid)                     # builds + caches the join entries
+    pa = svc._sessions[a].parser
+    join_bytes = pa._join_nbytes()
+    assert join_bytes > 0
+    svc.cache_budget_bytes = join_bytes // 2
+    svc._maybe_evict()
+    # the LRU victim is FULLY reclaimed by per-node drops — products and
+    # join entries both — without falling back to a whole-cache cold drop
+    assert pa.cache_nbytes == 0
+    assert not pa._cold                   # classes+structure stay warm
+    # the protected most-recent session is never touched
+    assert svc._sessions[b].parser.cache_nbytes > 0
+    # correctness is untouched; the re-query pays per-chunk rebuilds
+    ref = parse_serial_matrix(art.matrices, "ab" * 14)
+    assert np.array_equal(svc.slpf(a).columns, ref.columns)
+    assert pa.rebuilds == 3               # one per re-reached chunk (4, 8, 16)
+
+
 def test_cost_aware_eviction_order(art, engine):
     """Largest-chunk sealed products evict first; LRU session breaks ties."""
     per_product = engine.tables.ell_pad ** 2 * 4
@@ -300,4 +327,5 @@ def test_packed_snapshot_restore_under_eviction(art, packed_engine):
     assert cold.sealed_products is None
     parser.restore(cold)
     assert np.array_equal(svc.slpf(sid).columns, ref.columns)
-    assert parser.rebuilds == 1
+    # per-chunk rebuild accounting: 2 sealed leaves (4+8) + the 4-char tail
+    assert parser.rebuilds == 3
