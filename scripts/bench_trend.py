@@ -16,7 +16,11 @@ working-tree copies after a CI bench run and compares every *throughput* row
     script exits non-zero so CI fails;
   * a file whose recorded ``config`` differs from the baseline's (full vs
     smoke sizes, different ``--only``) is skipped: those numbers are not
-    comparable.
+    comparable;
+  * a ``BENCH_<gate>.json`` present in the working tree but absent at
+    ``--base`` is a NEW gate (the PR that introduces a benchmark): its fresh
+    throughput rows are printed informationally as the baseline-to-be, and
+    the run stays green — new gates are never failures.
 
 Usage:  python scripts/bench_trend.py [--base HEAD] [--threshold 0.75]
 """
@@ -77,12 +81,20 @@ def main(argv=None) -> int:
 
     regressions = []
     compared = 0
+    new_gates = 0
     for path in sorted(REPO_ROOT.glob("BENCH_*.json")):
         base_doc = _committed(path, args.base)
-        if base_doc is None:
-            print(f"{path.name}: no committed baseline at {args.base} — skip")
-            continue
         fresh_doc = json.loads(path.read_text())
+        if base_doc is None:
+            # gate introduced by this change: nothing to compare against —
+            # print the fresh rows as the baseline-to-be (informational)
+            new_gates += 1
+            rows = _throughput_rows(fresh_doc)
+            print(f"{path.name}: new gate (no baseline at {args.base}) — "
+                  f"{len(rows)} throughput metric(s) recorded, informational")
+            for name, value in sorted(rows.items()):
+                print(f"{path.name}: {name}  (new) -> {value:.1f}")
+            continue
         if fresh_doc.get("config") != base_doc.get("config"):
             print(f"{path.name}: config changed "
                   f"({base_doc.get('config')} -> {fresh_doc.get('config')}) "
@@ -109,8 +121,9 @@ def main(argv=None) -> int:
             print(f"  {fname}: {name} {base_v:.1f} -> {fresh_v:.1f} "
                   f"({ratio:.2f}x)", file=sys.stderr)
         return 1
+    suffix = f" (+{new_gates} new gate(s))" if new_gates else ""
     print(f"\nbench trend clean: {compared} throughput metrics within "
-          f"{(1 - args.threshold) * 100:.0f}% of {args.base}")
+          f"{(1 - args.threshold) * 100:.0f}% of {args.base}{suffix}")
     return 0
 
 

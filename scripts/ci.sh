@@ -93,6 +93,13 @@ python -m benchmarks.run --quick --only tab5
 # {name, timestamp, config, metrics} perf-trajectory schema
 python scripts/obs_smoke.py
 
+# static-analysis gate: jaxpr/HLO lint over every registered backend's
+# compiled phase programs (no host callbacks, no f64 promotion, no dynamic
+# shapes), seeded f64/callback violations prove the lint still catches, the
+# fleet compile count stays O(#buckets), and backend="auto" parses
+# bit-identically to the backend the analyzer picks
+python scripts/analyze_gate.py
+
 # perf-trajectory trend gate: the BENCH_*.json files the gates above
 # regenerated vs the copies committed at HEAD — a >25% drop in any
 # throughput metric (at matching bench config) fails CI

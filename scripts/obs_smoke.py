@@ -24,7 +24,11 @@ Four checks, all through the public facade (``repro.Parser`` with
      tenant), and the table-compile cache counters
      (``table_cache_hits_total`` / ``table_cache_misses_total``) count
      distinct (pattern, backend) builds and render in the snapshot;
-  6. every ``BENCH_*.json`` at the repo root parses against the shared
+  6. analyzer metrics — construction-time analysis verdict counters
+     (``analyzer_verdicts_total``) and ``backend="auto"`` selection counters
+     (``auto_backend_selected_total``) stay inside ``METRIC_CATALOG`` and
+     render in the Prometheus text;
+  7. every ``BENCH_*.json`` at the repo root parses against the shared
      perf-trajectory schema (``validate_bench_report``).
 
 Exits non-zero on the first violated invariant, printing which one.
@@ -169,6 +173,35 @@ def check_fleet() -> None:
           f"{int(misses)} table builds (+{int(hits)} cache hits)")
 
 
+def check_analyzer() -> None:
+    """Analyzer metrics (repro.analyze leg 1) stay inside METRIC_CATALOG and
+    render in the Prometheus text: verdict counters from construction-time
+    analysis, auto-backend selection counters from backend="auto"."""
+    with repro.Parser(
+        repro.ParserConfig(regex="(a|b|ab)+", backend="auto", n_chunks=4)
+    ) as p:
+        assert p.parse("abab").ok, "analyzer: auto-backend parse rejected"
+        snap = p.stats()["metrics"]
+        validate_metric_names(snap)
+        flat = {str(k): v for k, v in snap.items()}
+        verdicts = flat.get("analyzer_verdicts_total")
+        assert verdicts and verdicts[0]["labels"].get("verdict") == "ok", \
+            "analyzer: analyzer_verdicts_total{verdict=ok} not recorded"
+        selected = flat.get("auto_backend_selected_total")
+        assert selected and selected[0]["value"] == 1, \
+            "analyzer: auto_backend_selected_total not recorded"
+        chosen = selected[0]["labels"].get("backend")
+        assert chosen == p.backend_name, (
+            f"analyzer: selection counter says {chosen!r} but the parser "
+            f"runs {p.backend_name!r}"
+        )
+        rendered = prometheus_text(snap)
+        for name in ("analyzer_verdicts_total", "auto_backend_selected_total"):
+            assert name in rendered, f"analyzer: {name} missing from rendering"
+    print(f"ok: analyze — verdict + auto-selection counters "
+          f"(backend={chosen!r}) in catalog and rendering")
+
+
 def check_bench_reports(repo_root: Path) -> None:
     reports = sorted(repo_root.glob("BENCH_*.json"))
     assert reports, "no BENCH_*.json at repo root (run benchmarks/run.py)"
@@ -187,6 +220,7 @@ def main() -> None:
             check_backend(backend, Path(tmp))
         check_stream_edit(Path(tmp))
     check_fleet()
+    check_analyzer()
     check_bench_reports(repo_root)
     print("obs smoke gate: all checks passed")
 

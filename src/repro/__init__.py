@@ -44,9 +44,10 @@ _EXPORTS = {
     "AdmissionError": ("repro.errors", "AdmissionError"),
     "SessionNotFound": ("repro.errors", "SessionNotFound"),
     "BudgetExceeded": ("repro.errors", "BudgetExceeded"),
+    "PathologicalPatternError": ("repro.errors", "PathologicalPatternError"),
 }
 
-__all__ = sorted(_EXPORTS) + ["api", "errors", "obs"]
+__all__ = sorted(_EXPORTS) + ["analyze", "api", "errors", "obs"]
 
 if TYPE_CHECKING:  # static importers see the real types
     from .api import (  # noqa: F401
@@ -69,6 +70,7 @@ if TYPE_CHECKING:  # static importers see the real types
         AdmissionError,
         BudgetExceeded,
         ParseError,
+        PathologicalPatternError,
         SessionNotFound,
     )
     from .obs import ObsConfig  # noqa: F401
@@ -77,7 +79,7 @@ if TYPE_CHECKING:  # static importers see the real types
 def __getattr__(name: str):
     import importlib
 
-    if name in ("api", "errors", "obs"):   # advertised submodules
+    if name in ("analyze", "api", "errors", "obs"):   # advertised submodules
         value = importlib.import_module(f"repro.{name}")
         globals()[name] = value
         return value

@@ -1,0 +1,72 @@
+"""``repro.analyze`` — the repo's ONE static-analysis layer.
+
+Three modules, two legs plus the shared hardware model:
+
+  ``pattern``    jax-free RE/automaton diagnostics: feasible-start width
+                 bounds, ambiguity verdicts, chunk-product density, the
+                 per-backend cost model behind ``backend="auto"`` and the
+                 ``analyze=`` admission knob (leg 1).
+  ``program``    jaxpr/HLO lint over compiled phase programs — no host
+                 callbacks, no f64 promotion, no dynamic shapes — run by
+                 ``scripts/analyze_gate.py`` in CI (leg 2).
+  ``roofline``   machine constants and compiled-artifact roofline terms
+                 (moved here from ``launch/analysis.py``, which re-exports).
+"""
+
+from __future__ import annotations
+
+from .pattern import (  # noqa: F401
+    AnalysisReport,
+    analyze_matrices,
+    analyze_pattern,
+    backend_cost_model,
+    cached_report,
+    choose_backend,
+    density_profile,
+    feasible_width_bounds,
+    nfa_ambiguous,
+    resolve_auto_backend,
+    sparse_width_bucket,
+)
+from .program import (  # noqa: F401
+    LintFinding,
+    lint_engine,
+    lint_hlo_text,
+    lint_jaxpr,
+    lint_program,
+    lint_report,
+)
+from .roofline import (  # noqa: F401
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS,
+    Roofline,
+    analyze_compiled,
+    collective_bytes,
+)
+
+__all__ = [
+    "AnalysisReport",
+    "HBM_BW",
+    "ICI_BW",
+    "LintFinding",
+    "PEAK_FLOPS",
+    "Roofline",
+    "analyze_compiled",
+    "analyze_matrices",
+    "analyze_pattern",
+    "backend_cost_model",
+    "cached_report",
+    "choose_backend",
+    "collective_bytes",
+    "density_profile",
+    "feasible_width_bounds",
+    "lint_engine",
+    "lint_hlo_text",
+    "lint_jaxpr",
+    "lint_program",
+    "lint_report",
+    "nfa_ambiguous",
+    "resolve_auto_backend",
+    "sparse_width_bucket",
+]

@@ -46,6 +46,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
 import numpy as np
@@ -55,7 +56,13 @@ from .core.engine import ParserEngine
 from .core.matrices import ParserMatrices, build_matrices
 from .core.segments import SegmentTable, compute_segments
 from .core.slpf import SLPF
-from .errors import AdmissionError, BudgetExceeded, ParseError, SessionNotFound
+from .errors import (
+    AdmissionError,
+    BudgetExceeded,
+    ParseError,
+    PathologicalPatternError,
+    SessionNotFound,
+)
 from .obs import ObsConfig, ObsHandle
 from .serve.parse_service import ParseRequest, ParseService
 from .serve.stream_service import StreamService
@@ -114,10 +121,17 @@ class ParserConfig:
 
     # what to parse
     regex: str
-    # phase backend: a registered name; kernel=True selects the backend's
+    # phase backend: a registered name, or "auto" — the static analyzer
+    # (repro.analyze) picks dense/packed/sparse from the pattern's modeled
+    # roofline before any device code; kernel=True selects the backend's
     # Pallas-kernel reach path where one exists (pallas is always kernels)
     backend: str = "jnp"
     kernel: bool = False
+    # static-analysis admission policy: "warn" (default) analyzes the
+    # pattern at construction and warns on pathological ambiguity, "strict"
+    # rejects it with repro.errors.PathologicalPatternError, "off" skips the
+    # construction-time analysis (stats()["analysis"] still computes lazily)
+    analyze: str = "warn"
     # sparse backend only: feasible-prefix depth — how many leading chunk
     # characters prune the speculative start-state set (PaREM boundary info);
     # deeper prunes harder at the cost of d sequential mat-vecs per chunk
@@ -154,20 +168,32 @@ class ParserConfig:
         if not isinstance(self.regex, str) or not self.regex:
             raise ValueError("ParserConfig.regex must be a non-empty pattern string")
         known = list_backends()
-        if self.backend not in known:
+        if self.backend != "auto" and self.backend not in known:
             raise ValueError(
-                f"unknown parse backend {self.backend!r}; known: {known}"
+                f"unknown parse backend {self.backend!r}; known: "
+                f"{known + ['auto']}"
+            )
+        if self.analyze not in ("off", "warn", "strict"):
+            raise ValueError(
+                f"analyze must be 'off', 'warn', or 'strict', got "
+                f"{self.analyze!r}"
             )
         if self.kernel and self.backend == "jnp":
             raise ValueError(
                 "kernel=True selects a Pallas kernel path; the 'jnp' backend "
                 "has none (use backend='pallas' or backend='packed')"
             )
+        if self.kernel and self.backend == "auto":
+            raise ValueError(
+                "kernel=True is a per-backend toggle; backend='auto' lets "
+                "the analyzer choose — pick an explicit backend to force "
+                "its kernel path"
+            )
         if self.feasible_depth < 1:
             raise ValueError(
                 f"feasible_depth must be >= 1, got {self.feasible_depth}"
             )
-        if self.feasible_depth != 1 and self.backend != "sparse":
+        if self.feasible_depth != 1 and self.backend not in ("sparse", "auto"):
             raise ValueError(
                 "feasible_depth tunes the sparse backend's start-state "
                 f"pruning; backend {self.backend!r} has no speculation to "
@@ -253,15 +279,26 @@ class ParserConfig:
 
     # ------------------------------------------------------------- builders
 
-    def build_backend(self) -> ParserBackend:
-        """Instantiate the configured phase backend (kernel toggle applied)."""
+    def build_backend(self, resolved: Optional[str] = None) -> ParserBackend:
+        """Instantiate the configured phase backend (kernel toggle applied).
+
+        ``resolved`` supplies the analyzer's choice when this config says
+        ``backend="auto"`` (the facade passes it); "auto" itself is not
+        instantiable."""
         from .core.backend import PackedBackend, SparseBackend
 
-        if self.backend == "sparse":
+        name = resolved if resolved is not None else self.backend
+        if name == "auto":
+            raise ValueError(
+                'backend="auto" resolves through the static analyzer; '
+                "build_backend needs the resolved name (use repro.analyze."
+                "resolve_auto_backend or construct a Parser)"
+            )
+        if name == "sparse":
             return SparseBackend(kernel=self.kernel, depth=self.feasible_depth)
-        if self.backend == "packed" and self.kernel:
+        if name == "packed" and self.kernel:
             return PackedBackend(kernel=True)
-        return get_backend(self.backend)
+        return get_backend(name)
 
     def build_mesh(self):
         """The declared device mesh, or None on a single-device config."""
@@ -575,9 +612,45 @@ class Parser:
         # one ObsHandle for the whole parser: the engine carries it, every
         # layer (services, streams, distribution) records into it
         self.obs = ObsHandle.from_config(config.obs)
+        # static analysis (repro.analyze leg 1): runs at construction when
+        # the config wants a verdict (analyze != "off") or needs one
+        # (backend == "auto"); otherwise stats()["analysis"] computes lazily
+        self._analysis = None
+        resolved = config.backend
+        if config.backend == "auto" or config.analyze != "off":
+            report = self._analyze()
+            m = self.obs.metrics
+            m.counter("analyzer_verdicts_total", verdict=report.verdict).inc()
+            if report.verdict == "pathological":
+                if config.analyze == "strict":
+                    m.counter(
+                        "admission_rejects_total",
+                        service="analyze",
+                        cause="pathological",
+                    ).inc()
+                    raise PathologicalPatternError(
+                        f"pattern {config.regex!r} is pathologically "
+                        "ambiguous (an iterator with a nullable body admits "
+                        "unboundedly many parse trees per text); "
+                        'analyze="strict" rejects it at construction',
+                        pattern=config.regex,
+                        ambiguity=report.ambiguity,
+                    )
+                if config.analyze == "warn":
+                    warnings.warn(
+                        f"repro: pattern {config.regex!r} is pathologically "
+                        "ambiguous — forest size is unbounded per text "
+                        '(analyze="strict" rejects such patterns)',
+                        UserWarning,
+                        stacklevel=2,
+                    )
+            if config.backend == "auto":
+                resolved = report.recommended_backend
+                m.counter("auto_backend_selected_total", backend=resolved).inc()
+        self._resolved_backend = resolved
         self.engine = ParserEngine(
             matrices,
-            backend=config.build_backend(),
+            backend=config.build_backend(resolved),
             min_chunk_len=config.min_chunk_len,
             mesh=config.build_mesh(),
             mesh_rules=config.build_mesh_rules(),
@@ -621,6 +694,29 @@ class Parser:
     @property
     def compile_count(self) -> int:
         return self.engine.compile_count
+
+    def _analyze(self):
+        if self._analysis is None:
+            from .analyze import analyze_matrices
+
+            # from_matrices parsers carry a placeholder pattern: analyze the
+            # automaton alone (the AST legs fall back to matrix facts)
+            pattern = self.config.regex
+            if pattern == "<prebuilt>":
+                pattern = None
+            self._analysis = analyze_matrices(
+                self.matrices,
+                pattern=pattern,
+                depth=max(4, self.config.feasible_depth),
+            )
+        return self._analysis
+
+    @property
+    def analysis(self):
+        """The static ``AnalysisReport`` (``repro.analyze`` leg 1), memoized:
+        feasible-start width bounds, ambiguity verdict, product density, the
+        per-backend cost model and the recommended backend."""
+        return self._analyze()
 
     @property
     def table(self) -> SegmentTable:
@@ -731,6 +827,10 @@ class Parser:
             # the facade's traffic is one tenant; its weight only matters
             # when sharing a queue (tests / embedders may add more)
             self._parse_service.register_tenant("default", weight=c.weight)
+            self._parse_service.set_pattern_guard(
+                self._analysis.verdict if self._analysis is not None else "ok",
+                c.analyze,
+            )
         return self._parse_service
 
     @property
@@ -745,6 +845,10 @@ class Parser:
                 max_seal_len=c.max_seal_len,
                 cache_budget_bytes=c.cache_budget_bytes,
                 max_pending_chars=c.max_pending_chars,
+            )
+            self._stream_service.set_pattern_guard(
+                self._analysis.verdict if self._analysis is not None else "ok",
+                c.analyze,
             )
         return self._stream_service
 
@@ -900,7 +1004,10 @@ class Parser:
         (``p50_ok``/``p99_ok`` appear only when targets are set);
         ``speculation`` (sparse backend only, else None) reports the carried
         product rows S vs ℓp and the per-bucket observed feasible-start
-        widths (mean/max over parses).
+        widths (mean/max over parses); ``analysis`` is the static analyzer's
+        report (``repro.analyze``: width bounds, ambiguity verdict, density,
+        per-backend cost model, recommended backend), computed lazily and
+        memoized — the typed ``AnalysisReport`` is on ``Parser.analysis``.
         """
         slo = self.config.slo
         # evaluate each service's stats property ONCE: it rebuilds the full
@@ -925,6 +1032,7 @@ class Parser:
             "stream": ss,
             "metrics": self.obs.metrics.snapshot(),
             "hlo": self._hlo_static_cost(ps),
+            "analysis": self._analyze().to_dict(),
             "speculation": speculation,
             "slo": {
                 "targets": dataclasses.asdict(slo) if slo is not None else None,
@@ -992,6 +1100,8 @@ class ParserFleet:
             self.engine, max_batch=max_batch, max_pending=max_pending
         )
         self._configs: Dict[str, ParserConfig] = {}
+        # tenant -> backend actually served (backend="auto" resolved)
+        self._backends: Dict[str, str] = {}
         for name, cfg in (tenants or {}).items():
             self.add(name, cfg)
 
@@ -1022,6 +1132,39 @@ class ParserFleet:
                 "fleet tenants run on the shared single-device engine pool; "
                 "mesh configs are not supported (use a dedicated Parser)"
             )
+        # static analysis at admission (repro.analyze leg 1): same policy as
+        # Parser construction, but the reject is an ADMISSION event — the
+        # fleet keeps serving its other tenants
+        if config.analyze != "off" and matrices is None:
+            from .analyze.pattern import cached_report
+
+            report = cached_report(
+                config.regex, max(4, config.feasible_depth)
+            )
+            m = self.obs.metrics
+            m.counter("analyzer_verdicts_total", verdict=report.verdict).inc()
+            if report.verdict == "pathological":
+                if config.analyze == "strict":
+                    m.counter(
+                        "admission_rejects_total",
+                        service="fleet",
+                        cause="pathological",
+                    ).inc()
+                    raise PathologicalPatternError(
+                        f"fleet tenant {name!r}: pattern {config.regex!r} is "
+                        "pathologically ambiguous (an iterator with a "
+                        "nullable body admits unboundedly many parse trees "
+                        'per text); analyze="strict" rejects it at admission',
+                        pattern=config.regex,
+                        ambiguity=report.ambiguity,
+                    )
+                warnings.warn(
+                    f"repro: fleet tenant {name!r} pattern {config.regex!r} "
+                    "is pathologically ambiguous — forest size is unbounded "
+                    'per text (analyze="strict" rejects such tenants)',
+                    UserWarning,
+                    stacklevel=2,
+                )
         spec = TenantSpec(
             regex=config.regex,
             backend=config.backend,
@@ -1034,6 +1177,9 @@ class ParserFleet:
         )
         self._service.add_tenant(name, spec, matrices=matrices)
         self._configs[name] = config
+        # the engine resolves backend="auto" (core/fleet.py) — record what
+        # this tenant actually runs on for stats()/results
+        self._backends[name] = self.engine.tenant(name).spec.backend
         return self
 
     @property
@@ -1117,9 +1263,10 @@ class ParserFleet:
         tenant: Optional[str] = None,
     ) -> ParseResult:
         cfg = self._configs.get(tenant) if tenant is not None else None
+        backend = self._backends.get(tenant) if tenant is not None else None
         return ParseResult(
             forest=slpf,
-            backend=cfg.backend if cfg is not None else "fleet",
+            backend=backend if backend is not None else "fleet",
             bucket=bucket,
             latency_s=latency_s,
             n_chunks=cfg.n_chunks if cfg is not None else None,
@@ -1161,7 +1308,7 @@ class ParserFleet:
                 grade["p99_ok"] = d["p99_latency_s"] <= slo.p99_s
             tenants[name] = {
                 **d,
-                "backend": cfg.backend if cfg is not None else None,
+                "backend": self._backends.get(name),
                 "slo": grade,
             }
         return {
@@ -1207,6 +1354,7 @@ __all__ = [
     "ParserConfig",
     "ParserFleet",
     "ParserStream",
+    "PathologicalPatternError",
     "SLOTargets",
     "SLPF",
     "SessionNotFound",

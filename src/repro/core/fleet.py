@@ -432,6 +432,20 @@ class FleetEngine:
         first membership)."""
         if tid in self._tenants:
             raise ValueError(f"fleet tenant {tid!r} already registered")
+        if spec.backend == "auto":
+            # static backend selection (repro.analyze): resolve before the
+            # bucket key is derived, so auto tenants land in the bucket of
+            # the backend they actually run on
+            from ..analyze.pattern import analyze_matrices, resolve_auto_backend
+
+            if matrices is not None:
+                chosen = analyze_matrices(matrices).recommended_backend
+            else:
+                chosen = resolve_auto_backend(spec.regex, spec.feasible_depth)
+            spec = dataclasses.replace(spec, backend=chosen)
+            self.obs.metrics.counter(
+                "auto_backend_selected_total", backend=chosen
+            ).inc()
         backend_key = spec.backend_key()
         min_lane = spec.make_backend().min_lane_pad
         if matrices is not None:

@@ -59,6 +59,28 @@ class SessionNotFound(ParseError, KeyError):
         return self.args[0]
 
 
+class PathologicalPatternError(ParseError, ValueError):
+    """The static analyzer rejected a pattern as pathologically ambiguous.
+
+    Raised under ``analyze="strict"`` — at ``Parser`` construction, at
+    ``ParserFleet.add``, and by the services' admission guards — when
+    ``repro.analyze`` diagnoses infinite ambiguity (an iterator with a
+    nullable body, e.g. ``(a*)*``): a single text then has unboundedly many
+    parse trees, so forest size is not bounded by input length and no
+    speculation-width bound holds.  Carries the pattern and the analyzer's
+    verdict so multi-tenant callers can report which tenant was refused.
+
+    Subclasses ``ValueError`` like the other malformed-request rejections,
+    so blanket ``except ValueError`` admission handlers keep catching it.
+    """
+
+    def __init__(self, message: str, *, pattern: Optional[str] = None,
+                 ambiguity: Optional[str] = None):
+        super().__init__(message)
+        self.pattern = pattern
+        self.ambiguity = ambiguity
+
+
 class BudgetExceeded(ParseError, ValueError):
     """A request was rejected because it would exceed a configured budget
     (queue depth, pending characters, seal-boundary piece size, …).

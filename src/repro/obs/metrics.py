@@ -52,7 +52,15 @@ METRIC_CATALOG: Dict[str, Tuple] = {
     "peak_queue_depth": ("gauge", "high-water queue depth"),
     # admission / SLO
     "admission_rejects_total": (
-        "counter", "admission rejections by cause (deadline|budget|tenant_budget)",
+        "counter",
+        "admission rejections by cause (deadline|budget|tenant_budget|pathological)",
+    ),
+    # static analysis (repro.analyze, leg 1)
+    "analyzer_verdicts_total": (
+        "counter", "static pattern analyses by verdict (ok|pathological)",
+    ),
+    "auto_backend_selected_total": (
+        "counter", 'backend="auto" resolutions by chosen backend',
     ),
     # engine program cache
     "compiled_programs_total": ("counter", "device programs traced (re-jit events)"),

@@ -279,6 +279,28 @@ class ParseService:
         self.max_pending = max_pending
         self._init_queue_state()
 
+    def set_pattern_guard(self, verdict: str, mode: str) -> None:
+        """Install the static analyzer's verdict on this service's admission
+        path (``repro.analyze``): under ``mode="strict"`` a ``pathological``
+        verdict rejects every request with ``PathologicalPatternError``
+        before any queueing.  The facade wires this from the construction-
+        time analysis; directly-assembled services default to no guard."""
+        self._pattern_guard = (verdict, mode)
+
+    def _check_pattern_guard(self) -> None:
+        verdict, mode = getattr(self, "_pattern_guard", ("ok", "off"))
+        if mode == "strict" and verdict == "pathological":
+            from ..errors import PathologicalPatternError
+
+            self.engine.obs.metrics.counter(
+                "admission_rejects_total", service="parse", cause="pathological"
+            ).inc()
+            raise PathologicalPatternError(
+                "this service's pattern was diagnosed pathologically "
+                'ambiguous; analyze="strict" refuses to serve it',
+                ambiguity="pathological",
+            )
+
     def _init_queue_state(self) -> None:
         self._queue: Deque[ParseRequest] = deque()
         self._by_rid: Dict[int, ParseRequest] = {}
@@ -365,6 +387,7 @@ class ParseService:
         A tenant's own ``max_pending`` budget is enforced first: one tenant
         flooding the queue bounces off its own cap, not the shared one.
         """
+        self._check_pattern_guard()
         m = self.engine.obs.metrics
         if self.max_pending is not None and self._n_pending >= self.max_pending:
             m.counter(

@@ -144,6 +144,29 @@ class StreamService:
         self._peak_queue_depth = 0
         self._buckets: Dict[int, BucketStats] = {}
 
+    def set_pattern_guard(self, verdict: str, mode: str) -> None:
+        """Install the static analyzer's verdict on this service's admission
+        path (``repro.analyze``): under ``mode="strict"`` a ``pathological``
+        verdict rejects every append with ``PathologicalPatternError``
+        before anything is queued.  The facade wires this from the
+        construction-time analysis; directly-assembled services default to
+        no guard."""
+        self._pattern_guard = (verdict, mode)
+
+    def _check_pattern_guard(self) -> None:
+        verdict, mode = getattr(self, "_pattern_guard", ("ok", "off"))
+        if mode == "strict" and verdict == "pathological":
+            from ..errors import PathologicalPatternError
+
+            self.engine.obs.metrics.counter(
+                "admission_rejects_total", service="stream", cause="pathological"
+            ).inc()
+            raise PathologicalPatternError(
+                "this service's pattern was diagnosed pathologically "
+                'ambiguous; analyze="strict" refuses to serve it',
+                ambiguity="pathological",
+            )
+
     # ------------------------------------------------------------- sessions
 
     def open(self, *, weight: float = 1.0) -> int:
@@ -206,6 +229,7 @@ class StreamService:
         ``BudgetExceeded``.
         """
         s = self._session(sid)
+        self._check_pattern_guard()
         classes = self.engine.classes_of_text(text)
         obs = self.engine.obs
         m = obs.metrics
